@@ -1,0 +1,25 @@
+"""Paper App. A/B: memory-efficient warm-up (schedule d) vs the standard
+schedule (c) — lower peak memory, extra tail bubbles."""
+from repro.core.schedule import run as run_schedule
+
+from benchmarks.common import times_for, write_csv
+
+
+def main():
+    rows = []
+    for pp, m in [(2, 32), (4, 48)]:
+        times = times_for(8 if pp == 2 else 4, pp, 6144)
+        for kind, label in [("stp", "ours (c)"),
+                            ("stp-memeff", "ours (d) mem-eff warmup")]:
+            res, _, _ = run_schedule(kind, pp, m, times)
+            s = res.summary()
+            rows.append([pp, m, label, round(s["total_time"], 1),
+                         round(s["pp_bubble_mean"], 1),
+                         round(s["peak_mem_max"], 1)])
+    write_csv("appA_warmup",
+              ["pp", "m", "schedule", "total_time", "pp_bubble",
+               "peak_mem_Ma"], rows)
+
+
+if __name__ == "__main__":
+    main()

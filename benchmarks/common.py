@@ -1,0 +1,58 @@
+"""Shared benchmark plumbing: A800-calibrated unit times and CSV helpers.
+
+Calibration (§5.1 setups, 16/32 A800s, fp/bf16):
+  * per-virtual-stage compute is identical across the paper's 16-GPU
+    configs (TP x PP x 2 chunks = 64 GPU-chunks of a fixed model), so
+    T_F = 2, T_B = 2, T_W = 1 time units everywhere;
+  * Fig. 1: TP All-Reduce share of a forward chunk is 27.5% at TP=8, PP=2,
+    seq 6144 -> T_AR = 0.76; other (TP, PP) scale T_AR by
+    (layers/vs ratio) x (ring factor (t-1)/t);
+  * sequence length scales T_AR slightly sub-linearly vs compute (attention
+    is quadratic, comm linear): T_AR(seq) ~ T_AR * (6144/seq)**0.15.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+from pathlib import Path
+
+from repro.core.simulator import StageTimes
+
+OUT = Path(__file__).resolve().parent.parent / "experiments"
+
+T_F, T_B, T_W = 2.0, 2.0, 1.0
+AR_REF = 0.76          # TP=8, PP=2, seq 6144 (Fig. 1 calibration)
+
+
+def t_ar_for(tp: int, pp: int, seq: int = 6144, ref_seq: int = 6144) -> float:
+    ring = (tp - 1) / tp / ((8 - 1) / 8)
+    layers_per_vs = 1.0 / pp / (1.0 / 2)         # vs PP=2 reference
+    seq_f = (ref_seq / max(seq, 1)) ** 0.15
+    return AR_REF * ring * layers_per_vs * seq_f
+
+
+def times_for(tp: int, pp: int, seq: int = 6144, t_comm: float = 0.0,
+              vit_factor: float = 1.0) -> StageTimes:
+    t = StageTimes.uniform(2 * pp, t_f=T_F, t_b=T_B, t_w=T_W,
+                           t_ar=t_ar_for(tp, pp, seq), m_a=1.0,
+                           t_comm=t_comm)
+    if vit_factor != 1.0:
+        t = t.scaled_vs(0, vit_factor)
+    return t
+
+
+def write_csv(name: str, header, rows):
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / f"{name}.csv"
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    buf = io.StringIO()
+    w = csv.writer(buf)
+    w.writerow(header)
+    w.writerows(rows)
+    print(f"--- {name} ({path}) ---")
+    print(buf.getvalue())
+    return path

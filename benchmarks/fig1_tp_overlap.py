@@ -1,0 +1,22 @@
+"""Paper Fig. 1: speedup of overlapping TP communication inside a
+Transformer layer, naive vs braided execution, as TP size grows."""
+from benchmarks.common import T_B, T_F, T_W, t_ar_for, write_csv
+
+
+def main():
+    rows = []
+    for seq in (3072, 6144):
+        for tp in (2, 4, 8):
+            ar = t_ar_for(tp, 2, seq)
+            naive_fwd = T_F + ar                   # AR exposed after compute
+            braided_fwd = max(T_F, ar)             # hidden under partner B
+            share = ar / naive_fwd
+            rows.append([seq, tp, round(ar, 3), round(100 * share, 1),
+                         round(naive_fwd / braided_fwd, 3)])
+    write_csv("fig1_tp_overlap",
+              ["seq", "tp", "t_ar", "tp_comm_share_%", "layer_speedup"],
+              rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper Figs. 7-8 / Table 6: LLM training throughput (samples/s) across
+schedules, (TP, PP), sequence lengths and microbatch counts.
+
+The simulator's time unit is calibrated per configuration so 1F1B-I matches
+the paper's measured samples/s at mbs=192(/256); STP and ZB-V throughputs
+are then *predictions* compared against the paper's measurements.
+"""
+from repro.core.schedule import run as run_schedule
+
+from benchmarks.common import times_for, write_csv
+
+# Paper Table 6 (samples/s), keyed (model, seq, tp, pp) -> {sched: [mbs...]}
+PAPER = {
+    ("12.1B", 3072, 4, 4): {"mbs": [64, 128, 192],
+                            "1f1b-i": [9.52, 9.63, 9.66],
+                            "zb-v": [9.12, 9.26, 9.31],
+                            "stp": [9.87, 10.1, 10.1]},
+    ("12.1B", 3072, 8, 2): {"mbs": [64, 128, 192],
+                            "1f1b-i": [6.57, 6.60, 6.60],
+                            "zb-v": [6.42, 6.46, 6.46],
+                            "stp": [7.28, 7.32, 7.33]},
+    ("12.1B", 6144, 4, 4): {"mbs": [64, 128, 192],
+                            "1f1b-i": [4.51, 4.57, 4.58],
+                            "zb-v": [4.45, 4.48, 4.49],
+                            "stp": [4.74, 4.82, 4.83]},
+    ("12.1B", 6144, 8, 2): {"mbs": [64, 128, 192],
+                            "1f1b-i": [3.11, 3.13, 3.11],
+                            "zb-v": [3.13, 3.13, 3.13],
+                            "stp": [3.46, 3.47, 3.49]},
+    ("26.3B", 2048, 4, 8): {"mbs": [96, 176, 256],
+                            "1f1b-i": [12.3, 12.8, 12.7],
+                            "zb-v": [12.4, 12.7, 12.8],
+                            "stp": [13.0, 13.2, 13.4]},
+    ("26.3B", 2048, 8, 4): {"mbs": [96, 176, 256],
+                            "1f1b-i": [8.60, 8.67, 8.68],
+                            "zb-v": [8.71, 8.79, 8.79],
+                            "stp": [9.48, 9.56, 9.61]},
+    ("26.3B", 4096, 4, 8): {"mbs": [96, 176, 256],
+                            "1f1b-i": [6.16, 6.17, 6.28],
+                            "zb-v": [6.17, 6.28, 6.31],
+                            "stp": [6.33, 6.49, 6.51]},
+    ("26.3B", 4096, 8, 4): {"mbs": [96, 176, 256],
+                            "1f1b-i": [4.23, 4.24, 4.25],
+                            "zb-v": [4.26, 4.28, 4.29],
+                            "stp": [4.66, 4.70, 4.72]},
+}
+
+
+def simulate_config(seq, tp, pp, mbs_list, t_comm=0.05):
+    out = {}
+    times = times_for(tp, pp, seq, t_comm=t_comm)
+    for kind in ("1f1b-i", "zb-v", "stp"):
+        out[kind] = []
+        for m in mbs_list:
+            res, _, _ = run_schedule(kind, pp, m, times)
+            out[kind].append(m / res.total_time)   # samples per time unit
+    return out
+
+
+def main():
+    rows = []
+    worst = 0.0
+    for (model, seq, tp, pp), paper in PAPER.items():
+        sim = simulate_config(seq, tp, pp, paper["mbs"])
+        # calibrate time unit on 1F1B-I at the largest mbs
+        scale = paper["1f1b-i"][-1] / sim["1f1b-i"][-1]
+        for kind in ("1f1b-i", "zb-v", "stp"):
+            for i, m in enumerate(paper["mbs"]):
+                pred = sim[kind][i] * scale
+                meas = paper[kind][i]
+                err = pred / meas - 1
+                if kind != "1f1b-i" or i != len(paper["mbs"]) - 1:
+                    worst = max(worst, abs(err))
+                rows.append([model, seq, tp, pp, kind, m,
+                             round(pred, 2), meas, f"{100 * err:+.1f}%"])
+        gain_pred = sim["stp"][-1] / sim["1f1b-i"][-1] - 1
+        gain_meas = paper["stp"][-1] / paper["1f1b-i"][-1] - 1
+        rows.append([model, seq, tp, pp, "stp_gain_vs_1f1bi", "-",
+                     f"{100 * gain_pred:.1f}%", f"{100 * gain_meas:.1f}%",
+                     ""])
+    write_csv("fig7_fig8_llm",
+              ["model", "seq", "tp", "pp", "schedule", "mbs",
+               "samples_per_s_sim", "samples_per_s_paper", "rel_err"],
+              rows)
+    print(f"worst prediction error vs paper: {100 * worst:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""§Roofline aggregation: read experiments/dryrun/*.json (produced by
+repro.launch.dryrun) into the per-(arch x shape x mesh) roofline table."""
+import json
+from pathlib import Path
+
+from benchmarks.common import OUT, write_csv
+
+
+def main():
+    d = OUT / "dryrun"
+    rows = []
+    for f in sorted(d.glob("*.json")) if d.exists() else []:
+        r = json.loads(f.read_text())
+        tag = f.stem.split("_")[-1]
+        if "skipped" in r:
+            rows.append([r["arch"], r["shape"], tag, "SKIP", r["skipped"],
+                         "", "", "", "", "", ""])
+            continue
+        if "error" in r:
+            rows.append([r["arch"], r["shape"], tag, "FAIL",
+                         r["error"][:60], "", "", "", "", "", ""])
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory_analysis") or {}
+        rows.append([
+            r["arch"], r["shape"], tag, "OK", rl["dominant"],
+            f"{rl['compute_s']:.4f}", f"{rl['memory_s']:.4f}",
+            f"{rl['collective_s']:.4f}",
+            f"{(rl['useful_flops_frac'] or 0):.3f}",
+            f"{(mem.get('peak_bytes') or 0) / 2**30:.2f}",
+            f"{r['per_chip']['collective_bytes'] / 2**30:.2f}",
+        ])
+    write_csv("roofline",
+              ["arch", "shape", "mesh", "status", "dominant/why",
+               "compute_s", "memory_s", "collective_s", "useful_flops",
+               "peak_gb_per_chip", "coll_gb_per_chip"], rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig9       # one
+"""
+import sys
+import time
+
+from benchmarks import (appA_warmup, fig1_tp_overlap, fig7_fig8_llm,
+                        fig9_memory, fig10_offload, roofline, table1_theory,
+                        table3_mllm, table4_mfu)
+
+ALL = {
+    "table1": table1_theory.main,
+    "fig1": fig1_tp_overlap.main,
+    "fig7_fig8": fig7_fig8_llm.main,
+    "table3": table3_mllm.main,
+    "fig9": fig9_memory.main,
+    "fig10": fig10_offload.main,
+    "appA": appA_warmup.main,
+    "table4": table4_mfu.main,
+    "roofline": roofline.main,
+}
+
+
+def main():
+    picks = [a for a in sys.argv[1:] if not a.startswith("-")]
+    names = picks or list(ALL)
+    for name in names:
+        t0 = time.time()
+        ALL[name]()
+        print(f"[{name}] done in {time.time() - t0:.1f}s\n", flush=True)
+
+
+if __name__ == "__main__":
+    main()

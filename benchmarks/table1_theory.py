@@ -1,0 +1,33 @@
+"""Paper Table 1: theoretical PP bubble / TP bubble / peak activation
+memory vs the event-driven simulator, for 1F1B-I, ZB-V and STP."""
+from repro.core.schedule import run as run_schedule
+from repro.core.simulator import StageTimes
+from repro.core.theory import THEORY, UnitTimes
+
+from benchmarks.common import T_B, T_F, T_W, write_csv
+
+
+def main():
+    rows = []
+    u = UnitTimes(t_f=T_F, t_b=T_B, t_w=T_W, t_ar=0.5)
+    for p, m in [(2, 64), (4, 64), (8, 96)]:
+        times = StageTimes.uniform(2 * p, t_f=u.t_f, t_b=u.t_b, t_w=u.t_w,
+                                   t_ar=u.t_ar, m_a=u.m_a)
+        for kind in ("1f1b-i", "zb-v", "stp"):
+            th = THEORY[kind](p, m, u)
+            res, _, _ = run_schedule(kind, p, m, times)
+            s = res.summary()
+            rows.append([
+                kind, p, m,
+                round(th.pp_bubble, 2), round(s["pp_bubble_mean"], 2),
+                round(th.tp_bubble, 2), round(s["tp_exposed_mean"], 2),
+                round(th.peak_act_memory, 1), round(s["peak_mem_max"], 1),
+            ])
+    write_csv("table1_theory",
+              ["schedule", "p", "m", "pp_bubble_theory", "pp_bubble_sim",
+               "tp_bubble_theory", "tp_bubble_sim", "peak_mem_theory",
+               "peak_mem_sim"], rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Table 3: MLLM training throughput with an imbalanced ViT first
+virtual stage.  PP=4 is workload-balanced (ViT FLOPs ~ one virtual stage);
+PP=2 has a lighter ViT, PP=8 a heavier one (the paper's three regimes)."""
+from repro.core.schedule import run as run_schedule
+
+from benchmarks.common import times_for, write_csv
+
+# (model, tp, pp, vit_factor): Table 3 rows at the largest mbs.
+PAPER = {
+    ("14.9B", 4, 4, 1.0): {"mbs": 192, "1f1b-i": 4.46, "zb-v": 4.31,
+                           "stp": 4.65},
+    ("14.9B", 8, 2, 0.6): {"mbs": 192, "1f1b-i": 2.46, "zb-v": 2.49,
+                           "stp": 2.87},
+    ("28.8B", 4, 8, 1.6): {"mbs": 256, "1f1b-i": 5.85, "zb-v": 6.01,
+                           "stp": 6.19},
+}
+
+
+def main():
+    rows = []
+    for (model, tp, pp, vit), paper in PAPER.items():
+        times = times_for(tp, pp, 5120, t_comm=0.05, vit_factor=vit)
+        sim = {}
+        for kind in ("1f1b-i", "zb-v", "stp"):
+            res, _, _ = run_schedule(kind, pp, paper["mbs"], times)
+            sim[kind] = paper["mbs"] / res.total_time
+        scale = paper["1f1b-i"] / sim["1f1b-i"]
+        for kind in ("1f1b-i", "zb-v", "stp"):
+            pred = sim[kind] * scale
+            rows.append([model, tp, pp, vit, kind, round(pred, 2),
+                         paper[kind],
+                         f"{100 * (pred / paper[kind] - 1):+.1f}%"])
+        gp = sim["stp"] / sim["1f1b-i"] - 1
+        gm = paper["stp"] / paper["1f1b-i"] - 1
+        rows.append([model, tp, pp, vit, "stp_gain", f"{100 * gp:.1f}%",
+                     f"{100 * gm:.1f}%", ""])
+    write_csv("table3_mllm",
+              ["model", "tp", "pp", "vit_factor", "schedule", "sim",
+               "paper", "rel_err"], rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Batched serving: prefill + autoregressive decode with KV ring buffers /
+SSM states across three architecture families.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import model as M
+
+
+def main():
+    for arch in ("qwen3-4b", "gemma3-12b", "xlstm-125m"):
+        cfg = get_config(arch).reduced(n_layers=2, d_model=128, n_heads=4,
+                                       vocab=512)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        stacked = {"embed": params["embed"],
+                   "blocks": M.stack_blocks(params["blocks"],
+                                            M.period_of(cfg)),
+                   "head": params["head"]}
+        b, plen, gen = 4, 16, 12
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (b, plen), 0,
+                                     cfg.vocab)
+        t0 = time.time()
+        out = generate(cfg, stacked, prompts, gen, max_seq=plen + gen + 1)
+        dt = time.time() - t0
+        assert out.shape == (b, plen + gen)
+        kinds = {l.mixer for l in cfg.layers}
+        print(f"{arch:28s} mixers={sorted(kinds)} "
+              f"{b}x{gen} tokens in {dt:5.1f}s "
+              f"sample={list(np.asarray(out[0, -6:]))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from repro.configs.gemma3_12b import CONFIG as _gemma3
+from repro.configs.hubert_xlarge import CONFIG as _hubert
+from repro.configs.jamba_1_5_large_398b import CONFIG as _jamba
+from repro.configs.llava_next_mistral_7b import CONFIG as _llava
+from repro.configs.olmoe_1b_7b import CONFIG as _olmoe
+from repro.configs.qwen2_paper import (QWEN2_12B, QWEN2_26B, QWEN2_VL_14B,
+                                       QWEN2_VL_28B)
+from repro.configs.qwen3_4b import CONFIG as _qwen3_4b
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as _qwen3_moe
+from repro.configs.stablelm_3b import CONFIG as _stablelm
+from repro.configs.starcoder2_15b import CONFIG as _starcoder2
+from repro.configs.xlstm_125m import CONFIG as _xlstm
+from repro.models.config import ModelConfig
+
+ASSIGNED = {
+    c.name: c for c in [
+        _olmoe, _qwen3_moe, _starcoder2, _llava, _gemma3, _hubert,
+        _stablelm, _xlstm, _jamba, _qwen3_4b,
+    ]
+}
+
+PAPER = {c.name: c for c in [QWEN2_12B, QWEN2_26B, QWEN2_VL_14B, QWEN2_VL_28B]}
+
+REGISTRY = {**ASSIGNED, **PAPER}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]

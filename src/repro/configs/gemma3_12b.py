@@ -1,0 +1,22 @@
+"""gemma3-12b [dense] — 5:1 local(1024-window):global attention interleave,
+GeGLU, 128k context, 262k vocab, head_dim 256.  [hf:google/gemma-3-1b-pt]"""
+from repro.models.config import LayerSpec, ModelConfig, pattern_layers
+
+_LOCAL = LayerSpec(mixer="attn", mlp="gated", window=1024)
+_GLOBAL = LayerSpec(mixer="attn", mlp="gated", window=None)
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    d_model=3840,
+    n_heads=16,
+    kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab=262144,
+    layers=pattern_layers(48, [_LOCAL] * 5 + [_GLOBAL]),
+    gated_act="gelu",
+    rope_theta=1e6,
+    max_seq=131072,
+    source="[hf:google/gemma-3-1b-pt]",
+)

@@ -1,0 +1,25 @@
+"""hubert-xlarge [audio] — encoder-only transformer (wav2vec2 arch), masked
+frame-cluster prediction over 504 k-means targets.
+
+The conv waveform feature extractor + conv positional embedding is a STUB per
+the assignment carve-out: `input_specs` provides precomputed frame embeddings
+(b, s, d_model).  Encoder-only => non-causal attention, no decode shapes
+(noted in DESIGN.md §5).  [arXiv:2106.07447]"""
+from repro.models.config import LayerSpec, ModelConfig, uniform_layers
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    d_model=1280,
+    n_heads=16,
+    kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    layers=uniform_layers(48, LayerSpec(mixer="attn", mlp="plain")),
+    norm="layernorm",
+    plain_act="gelu",
+    causal=False,
+    use_rope=False,
+    frontend="embed",
+    source="[arXiv:2106.07447]",
+)

@@ -1,0 +1,28 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba:attention 7:1 interleave (attention
+at position 4 of each 8-layer period), MoE (16 experts top-2) on every other
+layer, dense gated FFN otherwise.  Mamba states + sparse KV => sub-quadratic,
+runs long_500k.  [arXiv:2403.19887]"""
+from repro.models.config import LayerSpec, ModelConfig, MoEConfig, pattern_layers
+
+_PERIOD = [
+    LayerSpec(mixer="attn" if i == 4 else "mamba",
+              mlp="moe" if i % 2 == 1 else "gated")
+    for i in range(8)
+]
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    d_model=8192,
+    n_heads=64,
+    kv_heads=8,
+    d_ff=24576,
+    vocab=65536,
+    layers=pattern_layers(72, _PERIOD),
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff=24576),
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    rope_theta=1e6,
+    source="[arXiv:2403.19887]",
+)

@@ -1,0 +1,23 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B language backbone consuming
+projected anyres image-tile patch embeddings + text embeddings.
+
+The vision tower (CLIP ViT-L/14 + 2-layer MLP projector, anyres tiling into
+up to 4 tiles + base) is a STUB per the assignment carve-out: `input_specs`
+provides the precomputed multimodal embedding sequence (b, s, d_model); a
+trainable projector linear is retained in-model.  Text decode uses the token
+embedding table.  [hf:llava-hf/llava-v1.6-mistral-7b-hf]"""
+from repro.models.config import LayerSpec, ModelConfig, uniform_layers
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    d_model=4096,
+    n_heads=32,
+    kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    layers=uniform_layers(32, LayerSpec(mixer="attn", mlp="gated")),
+    frontend="embed",
+    rope_theta=1e6,
+    source="[hf:llava-hf/llava-v1.6-mistral-7b-hf]",
+)

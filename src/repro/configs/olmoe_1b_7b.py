@@ -1,0 +1,17 @@
+"""olmoe-1b-7b [moe] — OLMoE: 64 experts, top-8, no dense FFN.
+[arXiv:2409.02060]"""
+from repro.models.config import LayerSpec, ModelConfig, MoEConfig, uniform_layers
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    d_model=2048,
+    n_heads=16,
+    kv_heads=16,
+    d_ff=0,
+    vocab=50304,
+    layers=uniform_layers(16, LayerSpec(mixer="attn", mlp="moe")),
+    moe=MoEConfig(num_experts=64, top_k=8, d_ff=1024),
+    rope_theta=1e4,
+    source="[arXiv:2409.02060]",
+)

@@ -1,0 +1,66 @@
+"""The paper's own evaluation models (Table 2): Qwen2 12.1B / 26.3B LLMs and
+Qwen2-VL 14.9B / 28.8B MLLMs.  Used by the benchmark harness to reproduce
+Figs. 7/8 and Table 3 with architecture-accurate unit-time ratios; the ViT
+tower of the MLLMs is the stub frontend (assignment carve-out)."""
+from repro.models.config import LayerSpec, ModelConfig, uniform_layers
+
+QWEN2_12B = ModelConfig(
+    name="qwen2-12.1b-paper",
+    family="dense",
+    d_model=5120,
+    n_heads=40,
+    kv_heads=8,
+    d_ff=13824,
+    vocab=152064,
+    layers=uniform_layers(30, LayerSpec(mixer="attn", mlp="gated")),
+    rope_theta=1e6,
+    source="[paper Table 2]",
+)
+
+QWEN2_26B = ModelConfig(
+    name="qwen2-26.3b-paper",
+    family="dense",
+    d_model=7168,
+    n_heads=56,
+    kv_heads=8,
+    d_ff=20480,
+    vocab=152064,
+    layers=uniform_layers(46, LayerSpec(mixer="attn", mlp="gated")),
+    rope_theta=1e6,
+    source="[paper Table 2]",
+)
+
+# MLLM language towers (ViT as stub; ViT dims recorded for the simulator's
+# per-virtual-stage workload model: 14.9B = 1.7B ViT (32L/16H/2048) + 13.2B
+# LM; 28.8B = 5.6B ViT (+26L/4096) + 23.2B LM).
+QWEN2_VL_14B = ModelConfig(
+    name="qwen2-vl-14.9b-paper",
+    family="vlm",
+    d_model=5120,
+    n_heads=40,
+    kv_heads=8,
+    d_ff=13824,
+    vocab=152064,
+    layers=uniform_layers(33, LayerSpec(mixer="attn", mlp="gated")),
+    frontend="embed",
+    rope_theta=1e6,
+    source="[paper Table 2]",
+)
+
+QWEN2_VL_28B = ModelConfig(
+    name="qwen2-vl-28.8b-paper",
+    family="vlm",
+    d_model=7168,
+    n_heads=56,
+    kv_heads=8,
+    d_ff=20480,
+    vocab=152064,
+    layers=uniform_layers(43, LayerSpec(mixer="attn", mlp="gated")),
+    frontend="embed",
+    rope_theta=1e6,
+    source="[paper Table 2]",
+)
+
+# ViT tower shapes used by the MLLM workload model (simulator only).
+VIT_1_7B = dict(layers=32, heads=16, d_model=2048)
+VIT_5_6B = dict(layers=26, heads=16, d_model=4096)

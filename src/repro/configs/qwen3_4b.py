@@ -1,0 +1,17 @@
+"""qwen3-4b [dense] — qk-norm, GQA kv=8, head_dim 128.  [hf:Qwen/Qwen3-8B]"""
+from repro.models.config import LayerSpec, ModelConfig, uniform_layers
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    family="dense",
+    d_model=2560,
+    n_heads=32,
+    kv_heads=8,
+    head_dim=128,
+    d_ff=9728,
+    vocab=151936,
+    layers=uniform_layers(36, LayerSpec(mixer="attn", mlp="gated",
+                                        qk_norm=True)),
+    rope_theta=1e6,
+    source="[hf:Qwen/Qwen3-8B]",
+)

@@ -1,0 +1,18 @@
+"""qwen3-moe-235b-a22b [moe] — Qwen3-MoE: 128 experts, top-8, GQA kv=4,
+qk-norm (Qwen3 family), head_dim 128.  [hf:Qwen/Qwen3-30B-A3B]"""
+from repro.models.config import LayerSpec, ModelConfig, MoEConfig, uniform_layers
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    d_model=4096,
+    n_heads=64,
+    kv_heads=4,
+    head_dim=128,
+    d_ff=0,
+    vocab=151936,
+    layers=uniform_layers(94, LayerSpec(mixer="attn", mlp="moe", qk_norm=True)),
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff=1536),
+    rope_theta=1e6,
+    source="[hf:Qwen/Qwen3-30B-A3B]",
+)

@@ -1,0 +1,16 @@
+"""stablelm-3b [dense] — MHA (kv == heads), gated SiLU FFN.
+[hf:stabilityai/stablelm-2-1_6b]"""
+from repro.models.config import LayerSpec, ModelConfig, uniform_layers
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    family="dense",
+    d_model=2560,
+    n_heads=32,
+    kv_heads=32,
+    d_ff=6912,
+    vocab=50304,
+    layers=uniform_layers(32, LayerSpec(mixer="attn", mlp="gated")),
+    rope_theta=1e4,
+    source="[hf:stabilityai/stablelm-2-1_6b]",
+)

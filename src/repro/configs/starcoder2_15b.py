@@ -1,0 +1,18 @@
+"""starcoder2-15b [dense] — GQA kv=4, RoPE, plain (non-gated) GELU FFN,
+LayerNorm.  [arXiv:2402.19173]"""
+from repro.models.config import LayerSpec, ModelConfig, uniform_layers
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    d_model=6144,
+    n_heads=48,
+    kv_heads=4,
+    d_ff=24576,
+    vocab=49152,
+    layers=uniform_layers(40, LayerSpec(mixer="attn", mlp="plain")),
+    norm="layernorm",
+    plain_act="gelu",
+    rope_theta=1e5,
+    source="[arXiv:2402.19173]",
+)

@@ -1,0 +1,18 @@
+"""xlstm-125m [ssm] — alternating sLSTM / mLSTM blocks (xLSTM[1:1]), 4 heads,
+no separate FFN (d_ff=0; the blocks carry their own up/down projections).
+Recurrent state => O(1) decode, runs long_500k.  [arXiv:2405.04517]"""
+from repro.models.config import LayerSpec, ModelConfig, pattern_layers
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    d_model=768,
+    n_heads=4,
+    kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    layers=pattern_layers(12, [LayerSpec(mixer="slstm", mlp="none"),
+                               LayerSpec(mixer="mlstm", mlp="none")]),
+    use_rope=False,
+    source="[arXiv:2405.04517]",
+)

@@ -1,0 +1,270 @@
+"""Schedule builders: GPipe, 1F1B, 1F1B-I, ZB-V and the paper's STP.
+
+A schedule is a per-device ordered list of :class:`repro.core.simulator.Instr`
+over virtual stages.  Explicit generators are used where the literature fixes
+the order (GPipe, 1F1B, Megatron's interleaved 1F1B); the decoupled-backward
+schedules (ZB-V, STP and its memory-efficient variant) are produced by
+running the event engine with a greedy dispatch *policy* — the recorded
+tables are then replayable by :func:`repro.core.simulator.simulate` and
+executable by the shard_map pipeline runtime.
+
+The STP policy implements §4.2:
+  * warm-up: max feasible in-flight microbatches; decoupled B (weight
+    separation ON) everywhere but the last virtual stage, braided as F&B /
+    F&W blocks as soon as partners exist;
+  * steady: braided F&B with *full* backward (weight separation OFF),
+    alternating chunk 1 / chunk 0 (same-chunk pattern (2) of §4.1);
+  * degraded (microbatches exhausted): weight separation reactivated —
+    braided F&B with deferred W;
+  * cool-down: remaining B's braided with stored W's (``BWx``), leftover W's
+    fill the tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.simulator import (Instr, Placement, PolicyState, StageTimes,
+                                  flat, generate, parallel, simulate, vshape)
+
+SCHEDULES = ("gpipe", "1f1b", "1f1b-i", "zb-v", "stp", "stp-memeff")
+
+
+# ---------------------------------------------------------------------------
+# Explicit generators (v = 1).
+# ---------------------------------------------------------------------------
+
+def gpipe_schedule(p: int, m: int) -> tuple[list[list[Instr]], Placement]:
+    pl = flat(p)
+    tables = []
+    for d in range(p):
+        t = [Instr("F", f=(d, i)) for i in range(m)]
+        t += [Instr("BW", b=(d, i), w=(d, i)) for i in range(m)]
+        tables.append(t)
+    return tables, pl
+
+
+def f1b1_schedule(p: int, m: int) -> tuple[list[list[Instr]], Placement]:
+    """Non-interleaved 1F1B (PipeDream-flush)."""
+    pl = flat(p)
+    tables = []
+    for d in range(p):
+        warm = min(p - 1 - d, m)
+        t = [Instr("F", f=(d, i)) for i in range(warm)]
+        for i in range(m - warm):
+            t.append(Instr("F", f=(d, warm + i)))
+            t.append(Instr("BW", b=(d, i), w=(d, i)))
+        for i in range(m - warm, m):
+            t.append(Instr("BW", b=(d, i), w=(d, i)))
+        tables.append(t)
+    return tables, pl
+
+
+# ---------------------------------------------------------------------------
+# Interleaved 1F1B (Megatron-LM), v = 2, parallel placement.
+# ---------------------------------------------------------------------------
+
+def interleaved_schedule(p: int, m: int, v: int = 2
+                         ) -> tuple[list[list[Instr]], Placement]:
+    if m % p:
+        raise ValueError("1F1B-I requires microbatches % p == 0 "
+                         f"(got m={m}, p={p})")
+    assert v == 2, "paper setting: two virtual stages per device"
+    pl = parallel(p)
+    total = m * v
+    tables = []
+    for d in range(p):
+        def fwd(n):
+            grp = n % (p * v)
+            return grp // p, (n // (p * v)) * p + grp % p   # (chunk, mb)
+
+        def bwd(n):
+            grp = n % (p * v)
+            return v - 1 - grp // p, (n // (p * v)) * p + grp % p
+
+        warm = min((p - d - 1) * 2 + (v - 1) * p, total)
+        t = []
+        for n in range(warm):
+            c, mb = fwd(n)
+            t.append(Instr("F", f=(pl.vs_of(d, c), mb)))
+        for n in range(total - warm):
+            c, mb = fwd(warm + n)
+            t.append(Instr("F", f=(pl.vs_of(d, c), mb)))
+            c, mb = bwd(n)
+            vs = pl.vs_of(d, c)
+            t.append(Instr("BW", b=(vs, mb), w=(vs, mb)))
+        for n in range(total - warm, total):
+            c, mb = bwd(n)
+            vs = pl.vs_of(d, c)
+            t.append(Instr("BW", b=(vs, mb), w=(vs, mb)))
+        tables.append(t)
+    return tables, pl
+
+
+# ---------------------------------------------------------------------------
+# Greedy policies (ZB-V, STP).
+# ---------------------------------------------------------------------------
+
+def _zbv_policy_factory(n_vs: int):
+    def policy(st: PolicyState) -> Optional[Instr]:
+        """ZB-V: decoupled backward always; eager B, then F (bounded
+        in-flight), W's fill bubbles.  No braiding — every F and B exposes
+        its collective.  The loss-stage F is exempt from the cap (its B
+        follows immediately; blocking it wedges the whole pipeline)."""
+        if st.ready_b:
+            vs, mb = st.ready_b[0]
+            return Instr("B", b=(vs, mb))
+        if st.ready_f:
+            if st.cap_ok:
+                vs, mb = st.ready_f[0]
+                return Instr("F", f=(vs, mb))
+            # chunk-1 ("returning") F's are exempt from the in-flight cap:
+            # they drain toward the loss stage and unblock the B chain —
+            # holding them wedges the V dataflow at large p.
+            back = [f for f in st.ready_f if f[0] >= n_vs // 2]
+            if back:
+                return Instr("F", f=back[0])
+        if st.pending_w:
+            vs, mb = st.pending_w[0]
+            return Instr("W", w=(vs, mb))
+        return None
+
+    return policy
+
+
+def zbv_schedule(p: int, m: int, times: Optional[StageTimes] = None
+                 ) -> tuple[list[list[Instr]], Placement]:
+    pl = vshape(p)
+    t = times or StageTimes.uniform(pl.n_vs)
+    tables = generate(_zbv_policy_factory(pl.n_vs), pl, t, m, cap=2 * p)
+    return tables, pl
+
+
+def _stp_policy_factory(p: int, n_vs: int, t: StageTimes):
+    """STP (§4.2).  Phases are detected from per-device progress:
+    warm-up ≈ first p B's, degraded/cool-down when the F queue runs dry."""
+    def braided(f, b, st):
+        vs, mb = b
+        warmup = st.b_done < p - 1 and vs != n_vs - 1
+        degraded = st.f_left <= 2
+        if warmup or degraded:
+            return Instr("FB", f=f, b=b)                     # W deferred
+        return Instr("FBW", f=f, b=b, w=b)
+
+    def policy(st: PolicyState) -> Optional[Instr]:
+        if st.ready_b:
+            vs, mb = st.ready_b[0]
+            # pattern (2): braid with a later-microbatch F of the SAME chunk;
+            # fall back to the other chunk's F (pattern (1)) if none.
+            braid = [f for f in st.ready_f if f[0] == vs and f[1] > mb] \
+                or [f for f in st.ready_f if f[0] != vs]
+            if braid:
+                return braided(braid[0], (vs, mb), st)
+            if st.f_left == 0 and st.pending_w:
+                w = st.pending_w[0]
+                return Instr("BWx", b=(vs, mb), w=w)         # cool-down
+            if st.b_done < p - 1 and vs != n_vs - 1 and st.f_left > 0:
+                return Instr("B", b=(vs, mb))                # warm-up W-sep
+            return Instr("BW", b=(vs, mb), w=(vs, mb))
+        if st.ready_f:
+            # braid with an *imminent* B whose upstream gradient lands inside
+            # this F's execution window (the B units of the block run after
+            # the F units — Fig. 3's interleaving).
+            for f in st.ready_f:
+                cands = [c for c in st.soon_b
+                         if c[2] <= st.now + t.t_f[f[0]]
+                         and (c[0], c[1]) != f]
+                same = [c for c in cands if c[0] == f[0] and c[1] < f[1]] \
+                    or cands
+                if same:
+                    vs, mb, _ = same[0]
+                    return braided(f, (vs, mb), st)
+            # self-braid at the loss stage: F(top, i) fused with its own
+            # loss backward B(top, i) — the "early backward pass on device
+            # 0" of Fig. 4.  Net-zero in-flight, so exempt from the cap.
+            tops = [f for f in st.ready_f if f[0] == n_vs - 1]
+            if tops and not st.cap_ok:
+                return braided(tops[0], tops[0], st)
+            # standalone F: warm-up fill (and pipeline progress), capped.
+            if st.cap_ok:
+                f = st.ready_f[0]
+                if st.pending_w:
+                    return Instr("FW", f=f, w=st.pending_w[0])  # F&W block
+                return Instr("F", f=f)
+        if st.pending_w:
+            vs, mb = st.pending_w[0]
+            return Instr("W", w=(vs, mb))
+        return None
+
+    return policy
+
+
+def stp_schedule(p: int, m: int, times: Optional[StageTimes] = None,
+                 mem_efficient: bool = False
+                 ) -> tuple[list[list[Instr]], Placement]:
+    pl = vshape(p)
+    t = times or StageTimes.uniform(pl.n_vs)
+    cap = 2 * p if mem_efficient else 3 * p
+    tables = generate(_stp_policy_factory(p, pl.n_vs, t), pl, t, m, cap=cap)
+    return tables, pl
+
+
+# ---------------------------------------------------------------------------
+# Registry & validation.
+# ---------------------------------------------------------------------------
+
+def build(kind: str, p: int, m: int, times: Optional[StageTimes] = None
+          ) -> tuple[list[list[Instr]], Placement]:
+    if kind == "gpipe":
+        return gpipe_schedule(p, m)
+    if kind == "1f1b":
+        return f1b1_schedule(p, m)
+    if kind == "1f1b-i":
+        return interleaved_schedule(p, m)
+    if kind == "zb-v":
+        return zbv_schedule(p, m, times)
+    if kind == "stp":
+        return stp_schedule(p, m, times)
+    if kind == "stp-memeff":
+        return stp_schedule(p, m, times, mem_efficient=True)
+    raise KeyError(f"unknown schedule {kind!r}; known: {SCHEDULES}")
+
+
+def validate(tables, pl: Placement, m: int) -> None:
+    """Every (phase, vs, mb) appears exactly once, on the right device, and
+    W never precedes its B nor B its F in the device order."""
+    seen = {}
+    for d, tab in enumerate(tables):
+        order = {}
+        for i, ins in enumerate(tab):
+            for ph, vs, mb in ins.components():
+                key = (ph, vs, mb)
+                if key in seen:
+                    raise AssertionError(f"duplicate {key}")
+                if pl.device(vs) != d:
+                    raise AssertionError(f"{key} on wrong device {d}")
+                seen[key] = (d, i)
+                order[key] = i
+        for (ph, vs, mb), i in order.items():
+            if ph == "W" and order.get(("B", vs, mb), 10 ** 9) > i:
+                raise AssertionError(f"W before B for vs={vs} mb={mb}")
+            if ph == "B" and order.get(("F", vs, mb), 10 ** 9) > i \
+                    and pl.device(vs) == d:
+                raise AssertionError(f"B before F for vs={vs} mb={mb}")
+    n_vs = pl.n_vs
+    expect = 3 * n_vs * m
+    if len(seen) != expect:
+        missing = {(ph, vs, mb) for ph in "FBW" for vs in range(n_vs)
+                   for mb in range(m)} - set(seen)
+        raise AssertionError(f"missing ops: {sorted(missing)[:8]} "
+                             f"({len(seen)}/{expect})")
+
+
+def run(kind: str, p: int, m: int, times: Optional[StageTimes] = None):
+    """Build + simulate; the one-call entry point used by benchmarks."""
+    tables, pl = build(kind, p, m, times)
+    t = times or StageTimes.uniform(pl.n_vs)
+    validate(tables, pl, m)
+    return simulate(tables, pl, t, m), tables, pl

@@ -1,0 +1,449 @@
+"""Event-driven pipeline-schedule simulator.
+
+This is the quantitative engine behind the paper's tables and figures: given
+per-virtual-stage unit times (T_F, T_B, T_W, T_AR, M_a) it executes a
+schedule — a per-device ordered list of :class:`Instr` — respecting
+
+  * in-order execution per device,
+  * cross-stage dataflow (F needs upstream F, B needs downstream B),
+  * the TP-exposure rules of §3 (which collectives an instruction hides).
+
+and reports iteration time, per-device PP bubbles, exposed TP communication
+and peak activation memory.  The same engine *generates* the greedy
+policy-driven schedules (ZB-V, STP) in ``repro.core.schedule``.
+
+Instruction kinds and their TP-exposure model (Fig. 2/3):
+
+  ``F``    standalone forward                      -> exposes T_AR
+  ``B``    decoupled activation backward           -> exposes T_AR
+  ``BW``   full backward (B + own W)               -> AR hidden under W
+  ``W``    deferred weight gradient                -> no collective
+  ``FB``   braided fwd + decoupled bwd  (Fig. 3b)  -> both ARs hidden
+  ``FBW``  braided fwd + full bwd       (Fig. 3a)  -> all ARs hidden
+  ``FW``   braided fwd + stored W                  -> F's AR hidden under W
+  ``BWx``  decoupled bwd braided w/ stored W       -> B's AR hidden under W
+
+Exposure is a property of the *schedule kind* (the paper's point): plain
+schedules issue ops sequentially on the compute stream so a decoupled B's AR
+is exposed even if a W happens to follow; only the braided launch structure
+legally overlaps them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal, Optional, Sequence
+
+import numpy as np
+
+Phase = Literal["F", "B", "W"]
+Kind = Literal["F", "B", "BW", "W", "FB", "FBW", "FW", "BWx"]
+
+
+# ---------------------------------------------------------------------------
+# Virtual-stage placements.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Placement:
+    """Maps virtual stages -> devices.  n_vs = v * p."""
+    p: int
+    v: int
+    kind: Literal["flat", "parallel", "vshape"]
+
+    @property
+    def n_vs(self) -> int:
+        return self.p * self.v
+
+    def device(self, vs: int) -> int:
+        if self.kind == "flat":            # v = 1
+            return vs
+        if self.kind == "parallel":        # 1F1B-I: chunk c stage s -> dev s
+            return vs % self.p
+        # vshape: chunk 0 ascending, chunk 1 descending (loss on device 0)
+        return vs if vs < self.p else 2 * self.p - 1 - vs
+
+    def chunk(self, vs: int) -> int:
+        if self.kind == "flat":
+            return 0
+        return vs // self.p
+
+    def vs_of(self, device: int, chunk: int) -> int:
+        if self.kind == "flat":
+            return device
+        if self.kind == "parallel":
+            return chunk * self.p + device
+        return device if chunk == 0 else 2 * self.p - 1 - device
+
+
+def flat(p: int) -> Placement:
+    return Placement(p, 1, "flat")
+
+
+def parallel(p: int) -> Placement:
+    return Placement(p, 2, "parallel")
+
+
+def vshape(p: int) -> Placement:
+    return Placement(p, 2, "vshape")
+
+
+# ---------------------------------------------------------------------------
+# Times and instructions.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StageTimes:
+    """Per-virtual-stage unit times; arrays of shape (n_vs,)."""
+    t_f: np.ndarray
+    t_b: np.ndarray
+    t_w: np.ndarray
+    t_ar: np.ndarray
+    m_a: np.ndarray
+    t_comm: float = 0.0           # explicit PP hop latency
+
+    @staticmethod
+    def uniform(n_vs: int, *, t_f=2.0, t_b=2.0, t_w=1.0, t_ar=0.5, m_a=1.0,
+                t_comm=0.0) -> "StageTimes":
+        one = np.ones(n_vs)
+        return StageTimes(t_f * one, t_b * one, t_w * one, t_ar * one,
+                          m_a * one, t_comm)
+
+    def scaled_vs(self, vs: int, factor: float) -> "StageTimes":
+        """Scale one virtual stage's compute (MLLM ViT imbalance)."""
+        def s(a):
+            a = a.copy()
+            a[vs] = a[vs] * factor
+            return a
+        return StageTimes(s(self.t_f), s(self.t_b), s(self.t_w),
+                          s(self.t_ar), s(self.m_a), self.t_comm)
+
+
+@dataclass(frozen=True)
+class Instr:
+    kind: Kind
+    f: Optional[tuple[int, int]] = None    # (vs, mb)
+    b: Optional[tuple[int, int]] = None
+    w: Optional[tuple[int, int]] = None
+
+    def components(self):
+        if self.f is not None:
+            yield ("F", *self.f)
+        if self.b is not None:
+            yield ("B", *self.b)
+        if self.w is not None:
+            yield ("W", *self.w)
+
+
+def duration(instr: Instr, t: StageTimes) -> tuple[float, float]:
+    """Returns (total duration, exposed TP communication within it)."""
+    d = 0.0
+    if instr.f is not None:
+        d += t.t_f[instr.f[0]]
+    if instr.b is not None:
+        d += t.t_b[instr.b[0]]
+    if instr.w is not None:
+        d += t.t_w[instr.w[0]]
+    k = instr.kind
+    if k == "F":
+        return d + t.t_ar[instr.f[0]], t.t_ar[instr.f[0]]
+    if k == "B":
+        return d + t.t_ar[instr.b[0]], t.t_ar[instr.b[0]]
+    if k == "BW":                       # AR hidden under own W
+        exp = max(0.0, t.t_ar[instr.b[0]] - t.t_w[instr.w[0]])
+        return d + exp, exp
+    if k == "W":
+        return d, 0.0
+    if k == "FB":                       # braided: both ARs hidden
+        ar = t.t_ar[instr.f[0]] + t.t_ar[instr.b[0]]
+        comp = d
+        exp = max(0.0, ar - comp)
+        return comp + exp, exp
+    if k == "FBW":
+        ar = t.t_ar[instr.f[0]] + t.t_ar[instr.b[0]]
+        exp = max(0.0, ar - d)
+        return d + exp, exp
+    if k == "FW":                       # F's AR hidden under the W
+        exp = max(0.0, t.t_ar[instr.f[0]] - t.t_w[instr.w[0]])
+        return d + exp, exp
+    if k == "BWx":                      # B's AR hidden under foreign W
+        exp = max(0.0, t.t_ar[instr.b[0]] - t.t_w[instr.w[0]])
+        return d + exp, exp
+    raise ValueError(k)
+
+
+# ---------------------------------------------------------------------------
+# Simulation result.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimResult:
+    total_time: float
+    busy: np.ndarray                 # per device, incl. exposed AR
+    tp_exposed: np.ndarray           # per device
+    peak_mem: np.ndarray             # per device, in M_a units
+    finish: dict                     # (phase, vs, mb) -> time
+    trace: list                      # (device, start, end, instr)
+    p: int
+    m: int
+
+    @property
+    def pp_bubble(self) -> np.ndarray:
+        return self.total_time - self.busy
+
+    def summary(self) -> dict:
+        return {
+            "total_time": self.total_time,
+            "pp_bubble_max": float(self.pp_bubble.max()),
+            "pp_bubble_mean": float(self.pp_bubble.mean()),
+            "tp_exposed_max": float(self.tp_exposed.max()),
+            "tp_exposed_mean": float(self.tp_exposed.mean()),
+            "peak_mem_max": float(self.peak_mem.max()),
+            "peak_mem_mean": float(self.peak_mem.mean()),
+            "peak_mem": [float(x) for x in self.peak_mem],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Core engine: replay a per-device instruction table.
+# ---------------------------------------------------------------------------
+
+def _dep_times(instr: Instr, pl: Placement, t: StageTimes, finish: dict,
+               m: int):
+    """Latest upstream completion needed before ``instr`` may start; None if
+    some dependency has not finished yet.
+
+    Braided blocks (FB/FBW) execute their F units first, so the B-part's
+    upstream gradient only needs to arrive ``t_f[f_vs]`` into the block —
+    this is exactly the paper's interleaving window (Fig. 3)."""
+    deps = []
+    n_vs = pl.n_vs
+    b_slack = 0.0
+    if instr.f is not None:
+        vs, mb = instr.f
+        if instr.kind in ("FB", "FBW"):
+            b_slack = t.t_f[vs]
+        if vs > 0:
+            key = ("F", vs - 1, mb)
+            if key not in finish:
+                return None
+            hop = t.t_comm if pl.device(vs - 1) != pl.device(vs) else 0.0
+            deps.append(finish[key] + hop)
+    if instr.b is not None:
+        vs, mb = instr.b
+        if vs < n_vs - 1:
+            key = ("B", vs + 1, mb)
+            if key not in finish:
+                return None
+            hop = t.t_comm if pl.device(vs + 1) != pl.device(vs) else 0.0
+            deps.append(finish[key] + hop - b_slack)
+        elif instr.f != (vs, mb):           # loss vs: needs own F
+            key = ("F", vs, mb)             # (self-braid F&B carries it)
+            if key not in finish:
+                return None
+            deps.append(finish[key] - b_slack)
+    if instr.w is not None and instr.w != instr.b:   # own-B W is in-instr
+        key = ("B", *instr.w)
+        if key not in finish:
+            return None
+        deps.append(finish[key])
+    return max(deps, default=0.0)
+
+
+def simulate(schedule: Sequence[Sequence[Instr]], pl: Placement,
+             t: StageTimes, m: int, *, offload_alpha: float = 0.0,
+             offload_overhead: float = 0.0) -> SimResult:
+    """Replay ``schedule`` (per-device in-order lists).
+
+    ``offload_alpha`` models the §4.4 enhanced variant: a fraction α of each
+    *chunk-0* activation is offloaded to host in parallel with compute
+    (chunk-1 activations have short lifespans and are skipped to avoid PCIe
+    contention), so an F of a chunk-0 virtual stage only holds (1-α)·M_a.
+    The paper constrains the offload time below T_F, so the throughput cost
+    is a small per-F ``offload_overhead`` (CPU-side, default 0)."""
+    n_dev = pl.p
+    free = np.zeros(n_dev)
+    ptr = [0] * n_dev
+    finish: dict = {}
+    busy = np.zeros(n_dev)
+    tp_exposed = np.zeros(n_dev)
+    mem = np.zeros(n_dev)
+    peak = np.zeros(n_dev)
+    trace = []
+    remaining = sum(len(s) for s in schedule)
+
+    while remaining:
+        progressed = False
+        # earliest feasible dispatch across devices
+        best = None
+        for d in range(n_dev):
+            if ptr[d] >= len(schedule[d]):
+                continue
+            instr = schedule[d][ptr[d]]
+            dep = _dep_times(instr, pl, t, finish, m)
+            if dep is None:
+                continue
+            start = max(free[d], dep)
+            if best is None or start < best[0]:
+                best = (start, d, instr)
+        if best is None:
+            raise RuntimeError(
+                "schedule deadlock: no instruction dispatchable; next per "
+                "device: " + str([schedule[d][ptr[d]] if ptr[d] < len(
+                    schedule[d]) else None for d in range(n_dev)]))
+        start, d, instr = best
+        dur, exp = duration(instr, t)
+        if offload_overhead and instr.f is not None \
+                and pl.chunk(instr.f[0]) == 0:
+            dur += offload_overhead
+        end = start + dur
+        for ph, vs, mb in instr.components():
+            finish[(ph, vs, mb)] = end
+            held = t.m_a[vs] * (1.0 - offload_alpha
+                                if pl.chunk(vs) == 0 else 1.0)
+            if ph == "F":
+                mem[d] += held
+                peak[d] = max(peak[d], mem[d])
+            elif ph == "B":
+                mem[d] -= held
+        free[d] = end
+        busy[d] += dur
+        tp_exposed[d] += exp
+        trace.append((d, start, end, instr))
+        ptr[d] += 1
+        remaining -= 1
+
+    return SimResult(total_time=float(free.max()), busy=busy,
+                     tp_exposed=tp_exposed, peak_mem=peak, finish=finish,
+                     trace=trace, p=pl.p, m=m)
+
+
+# ---------------------------------------------------------------------------
+# Greedy policy-driven schedule *generation* (used for ZB-V / STP).
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PolicyState:
+    """Per-device view handed to a policy at dispatch time."""
+    device: int
+    now: float
+    ready_f: list                    # [(vs, mb)] deps satisfied (uncapped)
+    ready_b: list                    # [(vs, mb)] deps satisfied
+    pending_w: list                  # [(vs, mb)] B done, W not yet issued
+    inflight: int                    # F issued - B issued on this device
+    f_left: int                      # F ops not yet issued on this device
+    b_done: int                      # B components completed on this device
+    cap_ok: bool = True              # standalone F would respect the cap
+    soon_b: list = field(default_factory=list)
+    # [(vs, mb, dep_time)] B ops whose upstream finishes in the near future —
+    # braidable as the B-part of an F&B block (B units start after F units).
+
+
+def generate(policy, pl: Placement, t: StageTimes, m: int,
+             cap: Optional[int] = None) -> list[list[Instr]]:
+    """Run the event engine with ``policy`` choosing each device's next
+    instruction; record the chosen per-device tables.
+
+    ``policy(state) -> Instr | None`` — None means stay idle (the device
+    waits for the next event even if some op is technically ready).
+    """
+    n_dev, n_vs = pl.p, pl.n_vs
+    my_vs = [[vs for vs in range(n_vs) if pl.device(vs) == d]
+             for d in range(n_dev)]
+    todo_f = {d: {(vs, mb) for vs in my_vs[d] for mb in range(m)}
+              for d in range(n_dev)}
+    todo_b = {d: {(vs, mb) for vs in my_vs[d] for mb in range(m)}
+              for d in range(n_dev)}
+    pending_w = {d: [] for d in range(n_dev)}
+    issued_w = {d: set() for d in range(n_dev)}
+    inflight = [0] * n_dev
+    b_done = [0] * n_dev
+    free = np.zeros(n_dev)
+    finish: dict = {}
+    tables: list[list[Instr]] = [[] for _ in range(n_dev)]
+    horizon: list[float] = []        # future completion times
+
+    slack = float(t.t_f.max())
+
+    def ready(d, now):
+        rf, rb, sb = [], [], []
+        for vs, mb in sorted(todo_f[d], key=lambda x: (x[1], -x[0])):
+            if vs == 0:
+                rf.append((vs, mb))
+                continue
+            key = ("F", vs - 1, mb)
+            hop = t.t_comm if pl.device(vs - 1) != d else 0.0
+            if key in finish and finish[key] + hop <= now:
+                rf.append((vs, mb))
+        for vs, mb in sorted(todo_b[d], key=lambda x: (x[1], -x[0])):
+            if vs == n_vs - 1:
+                key = ("F", vs, mb)
+                hop = 0.0
+            else:
+                key = ("B", vs + 1, mb)
+                hop = t.t_comm if pl.device(vs + 1) != d else 0.0
+            if key in finish:
+                dep = finish[key] + hop
+                if dep <= now:
+                    rb.append((vs, mb))
+                elif dep <= now + slack:
+                    sb.append((vs, mb, dep))
+        return rf, rb, sb
+
+    total_ops = lambda: sum(len(todo_f[d]) + len(todo_b[d])
+                            + len(pending_w[d]) for d in range(n_dev))
+
+    guard = 0
+    while total_ops():
+        guard += 1
+        if guard > 100 * n_dev * n_vs * max(m, 1) + 1000:
+            raise RuntimeError("generation did not converge")
+        progressed = False
+        order = sorted(range(n_dev), key=lambda d: free[d])
+        now = free[order[0]]
+        for d in order:
+            if free[d] > now:
+                break
+            rf, rb, sb = ready(d, now)
+            st = PolicyState(device=d, now=now, ready_f=rf, ready_b=rb,
+                             pending_w=list(pending_w[d]),
+                             inflight=inflight[d], f_left=len(todo_f[d]),
+                             b_done=b_done[d],
+                             cap_ok=(cap is None or inflight[d] < cap),
+                             soon_b=sb)
+            instr = policy(st)
+            if instr is None:
+                continue
+            dur, _ = duration(instr, t)
+            end = now + dur
+            for ph, vs, mb in instr.components():
+                finish[(ph, vs, mb)] = end
+                if ph == "F":
+                    todo_f[d].discard((vs, mb))
+                    inflight[d] += 1
+                elif ph == "B":
+                    todo_b[d].discard((vs, mb))
+                    inflight[d] -= 1
+                    b_done[d] += 1
+                    if instr.kind in ("B", "FB", "BWx"):
+                        pending_w[d].append((vs, mb))
+                else:
+                    if (vs, mb) in pending_w[d]:
+                        pending_w[d].remove((vs, mb))
+            free[d] = end
+            horizon.append(end)
+            if t.t_comm:
+                horizon.append(end + t.t_comm)   # cross-stage readiness
+            tables[d].append(instr)
+            progressed = True
+        if not progressed:
+            future = [x for x in horizon if x > now]
+            nxt = [f for f in free if f > now]
+            cands = future + nxt
+            if not cands:
+                raise RuntimeError("generation deadlock")
+            adv = min(cands)
+            for d in range(n_dev):
+                if free[d] <= now:
+                    free[d] = adv
+    return tables

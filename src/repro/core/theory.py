@@ -1,0 +1,108 @@
+"""Closed-form schedule analysis (paper Table 1).
+
+All quantities are for p pipeline stages, m microbatches (p << m), 2 virtual
+stages (chunks) per device, per-chunk forward time ``T_F``, activation- and
+weight-gradient times ``T_B``/``T_W``, per-chunk TP all-reduce time ``T_AR``
+and per-chunk activation memory ``M_a``.
+
+These are the *targets* the event-driven simulator (``core.simulator``) is
+validated against in tests and in ``benchmarks/table1_theory.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class UnitTimes:
+    """Per-model-chunk timing/memory constants of Table 1."""
+    t_f: float = 2.0      # forward
+    t_b: float = 2.0      # activation-gradient backward (B)
+    t_w: float = 1.0      # weight-gradient backward (W)
+    t_ar: float = 0.5     # TP all-reduce of one chunk (fwd == bwd)
+    m_a: float = 1.0      # activation memory of one chunk for one microbatch
+
+    @property
+    def t_full_b(self) -> float:
+        return self.t_b + self.t_w
+
+
+@dataclass(frozen=True)
+class TheoryRow:
+    pp_bubble: float      # idle time per device attributable to PP
+    tp_bubble: float      # non-overlapped TP communication time
+    peak_act_memory: float
+
+
+def theory_1f1b_i(p: int, m: int, u: UnitTimes) -> TheoryRow:
+    """Interleaved 1F1B with 2 virtual stages (Megatron-LM)."""
+    return TheoryRow(
+        pp_bubble=(p - 1) * (u.t_f + u.t_ar + u.t_b + u.t_w),
+        tp_bubble=2 * m * u.t_ar,
+        peak_act_memory=(3 * p - 2) * u.m_a,
+    )
+
+
+def theory_zbv(p: int, m: int, u: UnitTimes) -> TheoryRow:
+    """Zero Bubble V (controllable-memory V-shape, full B/W decoupling)."""
+    return TheoryRow(
+        pp_bubble=(p - 1) * (u.t_f + 2 * u.t_ar + u.t_b - 2 * u.t_w),
+        tp_bubble=4 * m * u.t_ar,
+        peak_act_memory=2 * p * u.m_a,
+    )
+
+
+def theory_stp(p: int, m: int, u: UnitTimes) -> TheoryRow:
+    """Ours (synergistic tensor & pipeline schedule)."""
+    return TheoryRow(
+        pp_bubble=(p - 1) * (u.t_f + u.t_ar + u.t_b - u.t_w),
+        tp_bubble=(2 * p + 1) * u.t_ar,
+        peak_act_memory=3 * p * u.m_a,
+    )
+
+
+def theory_gpipe(p: int, m: int, u: UnitTimes) -> TheoryRow:
+    """GPipe with the model treated as a single chunk per device (v=1):
+    classic (p-1)(F+B) bubble; every F and B exposes its collective (the full
+    backward hides the AR under W, so only forward ARs count)."""
+    t_f = 2 * u.t_f          # v=1: both chunks' layers in one stage pass
+    t_b = 2 * (u.t_b + u.t_w)
+    t_ar = 2 * u.t_ar
+    return TheoryRow(
+        pp_bubble=(p - 1) * (t_f + t_ar + t_b),
+        tp_bubble=m * t_ar,
+        peak_act_memory=2 * m * u.m_a,
+    )
+
+
+def theory_1f1b(p: int, m: int, u: UnitTimes) -> TheoryRow:
+    """Non-interleaved 1F1B (PipeDream-flush), v=1."""
+    t_f = 2 * u.t_f
+    t_b = 2 * (u.t_b + u.t_w)
+    t_ar = 2 * u.t_ar
+    return TheoryRow(
+        pp_bubble=(p - 1) * (t_f + t_ar + t_b),
+        tp_bubble=m * t_ar,
+        peak_act_memory=2 * p * u.m_a,
+    )
+
+
+THEORY = {
+    "gpipe": theory_gpipe,
+    "1f1b": theory_1f1b,
+    "1f1b-i": theory_1f1b_i,
+    "zb-v": theory_zbv,
+    "stp": theory_stp,
+}
+
+
+def ideal_time(p: int, m: int, u: UnitTimes) -> float:
+    """Zero-bubble, fully-overlapped iteration time: every device busy with
+    m microbatches of compute for both of its chunks."""
+    return m * 2 * (u.t_f + u.t_b + u.t_w)
+
+
+def iteration_time(kind: str, p: int, m: int, u: UnitTimes) -> float:
+    """Closed-form iteration time estimate: ideal + PP bubble + TP bubble."""
+    row = THEORY[kind](p, m, u)
+    return ideal_time(p, m, u) + row.pp_bubble + row.tp_bubble

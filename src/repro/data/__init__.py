@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, SyntheticTextDataset,
+                                 make_batches, microbatches)

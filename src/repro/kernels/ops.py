@@ -1,0 +1,52 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only: the
+kernel bodies execute in Python for correctness validation); on a TPU
+backend the same calls lower to Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None, q_offset: int = 0,
+                    qb: int = 128, kb: int = 256,
+                    interpret: Optional[bool] = None):
+    """GQA entry point: q (B, Hq, S, D); k, v (B, Hkv, T, D).
+
+    Folds the q heads of each kv group into the row dimension (positions
+    repeat per group, handled by ``q_offset`` masking inside the kernel
+    only when S == T; grouped-fold with distinct positions delegates to a
+    per-group vmap)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, S, D).reshape(B * Hkv, G, S, D)
+    kf = k.reshape(B * Hkv, T, D)
+    vf = v.reshape(B * Hkv, T, D)
+
+    def per_group(qg):
+        return flash_attention_fwd(qg, kf, vf, causal=causal, window=window,
+                                   scale=scale, q_offset=q_offset, qb=qb,
+                                   kb=kb, interpret=interpret)
+
+    o = jax.vmap(per_group, in_axes=1, out_axes=1)(qf)   # (B*Hkv, G, S, D)
+    return o.reshape(B, Hkv, G, S, D).reshape(B, Hq, S, D)
+
+
+def rmsnorm(x, g, eps: float = 1e-6, interpret: Optional[bool] = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return rmsnorm_fwd(x, g, eps=eps, interpret=interpret)

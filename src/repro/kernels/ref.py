@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention_core import reference_attention  # noqa: F401
+
+
+def reference_attention_mha(q, k, v, causal: bool = True,
+                            window: Optional[int] = None,
+                            scale: Optional[float] = None,
+                            q_offset: int = 0):
+    """(BH, S, D) MHA layout oracle matching the kernel's folded view."""
+    o = reference_attention(q[:, None], k[:, None], v[:, None],
+                            causal=causal, window=window, scale=scale,
+                            q_offset=q_offset)
+    return o[:, 0]
+
+
+def reference_rmsnorm(x, g, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * g.astype(jnp.float32)).astype(x.dtype)

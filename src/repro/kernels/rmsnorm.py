@@ -1,0 +1,46 @@
+"""Pallas TPU fused RMSNorm kernel.
+
+Pre-Attn / Pre-MLP units are memory-bound (read x, write x_ln); fusing the
+mean-square reduction, rsqrt and gain multiply into one VMEM pass halves the
+HBM traffic vs the unfused jnp graph.  Rows tile in blocks of ``rb`` (8*k
+sublanes), the model dim stays resident (d <= a few K fits VMEM easily).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                 # (rb, d)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * g_ref[...].astype(jnp.float32)[None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "rb", "interpret"))
+def rmsnorm_fwd(x, g, eps: float = 1e-6, rb: int = 256,
+                interpret: bool = True):
+    """x (..., d), g (d,) -> rmsnorm(x) * g, fused."""
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    n = x2.shape[0]
+    rb = min(rb, max(8, n))
+    pad = (-n) % rb
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(x2.shape[0] // rb,),
+        in_specs=[pl.BlockSpec((rb, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, g)
+    return out[:n].reshape(shape)

@@ -1,0 +1,330 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, report memory/cost/collective analysis for §Roofline.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init); smoke tests and benchmarks never import this module.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out d]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (ShardOptions, batch_specs, cache_specs,
+                                    param_specs, to_named)
+from repro.optim.adamw import OptConfig
+
+# TPU v5e hardware constants (§Roofline)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "u1": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, loop_trips: int = 1) -> dict:
+    """Per-chip bytes moved by collectives, summed from the result shapes of
+    every collective op in the partitioned module.  (all-reduce: result ==
+    operand; all-gather: result == bytes received; reduce-scatter: operand
+    bytes ~ result x group -- we count result shapes uniformly, a consistent
+    lower-bound proxy used for relative comparisons.)
+
+    Collectives whose metadata places them inside a ``while`` body (the
+    layer scan — the only rolled loop containing collectives in our graphs)
+    are multiplied by ``loop_trips`` (= n_layers / period)."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        mult = loop_trips if "/while/" in line else 1
+        out[op] += _shape_bytes(shape_txt) * mult
+        out["count"] += 1
+    out["total"] = sum(v for k, v in out.items()
+                       if k not in ("count", "total"))
+    return out
+
+
+def model_flops(cfg, shape: str) -> float:
+    """6·N·D (train) / 2·N·D (fwd-only), N = active params."""
+    n = active_params(cfg)
+    info = S.SHAPES[shape]
+    tokens = info["batch"] * (info["seq"] if info["kind"] != "decode" else 1)
+    mult = 6 if info["kind"] == "train" else 2
+    return float(mult * n * tokens)
+
+
+def active_params(cfg) -> float:
+    d, hd = cfg.d_model, cfg.hd
+    total = cfg.vocab * d * (1 if cfg.causal or cfg.frontend == "text" else 0)
+    total += cfg.vocab * d                      # head
+    for spec in cfg.layers:
+        if spec.mixer == "attn":
+            total += d * (cfg.n_heads + 2 * cfg.kv_heads) * hd \
+                + cfg.n_heads * hd * d
+        elif spec.mixer == "mamba":
+            di = cfg.ssm_expand * d
+            total += 2 * d * di + di * d
+        elif spec.mixer in ("mlstm", "slstm"):
+            du = (2 if spec.mixer == "mlstm" else 1) * d
+            total += (3 if spec.mixer == "mlstm" else 4) * d * du + du * d
+        if spec.mlp == "gated":
+            total += 3 * d * cfg.d_ff
+        elif spec.mlp == "plain":
+            total += 2 * d * cfg.d_ff
+        elif spec.mlp == "moe":
+            k = cfg.moe.top_k
+            e_active = (3 if cfg.moe.gated else 2) * d * cfg.moe.d_ff
+            total += k * e_active + d * cfg.moe.num_experts
+    return float(total)
+
+
+def _compile_one(cfg, shape, mesh, opts, remat):
+    info = S.SHAPES[shape]
+    sds = S.input_specs(cfg, shape)
+    p_specs = param_specs(sds["params"], mesh, cfg, opts)
+    b_specs = batch_specs(sds["batch"], opts, mesh)
+    if info["kind"] == "train":
+        step = S.make_train_step(cfg, OptConfig(), remat=remat)
+        in_sh = (to_named(p_specs, mesh),
+                 to_named({"mu": p_specs, "nu": p_specs,
+                           "step": jax.sharding.PartitionSpec()}, mesh),
+                 to_named(b_specs, mesh))
+        args = (sds["params"], sds["opt_state"], sds["batch"])
+    elif info["kind"] == "prefill":
+        step = S.make_prefill_step(cfg)
+        in_sh = (to_named(p_specs, mesh), to_named(b_specs, mesh))
+        args = (sds["params"], sds["batch"])
+    else:
+        step = S.make_serve_step(cfg)
+        c_specs = cache_specs(sds["caches"], cfg, info["batch"], mesh, opts)
+        in_sh = (to_named(p_specs, mesh), to_named(c_specs, mesh),
+                 to_named(b_specs, mesh),
+                 jax.sharding.NamedSharding(
+                     mesh, jax.sharding.PartitionSpec()))
+        args = (sds["params"], sds["caches"], sds["batch"], sds["pos"])
+    from repro.models import attention_core as AC
+    from repro.models import units as U
+    bh_axes = tuple(opts.data_axes) + (opts.model_axis,)
+    # NOTE (§Perf, refuted): pinning the dispatch buffers via
+    # units._MOE_SHARD regressed collectives ~14x — GSPMD's own resolution
+    # of the expert-parallel scatter beats the hand-pinned layout.  The
+    # hint mechanism stays available but is never enabled here.
+    with mesh, AC.bh_sharding(bh_axes):
+        lowered = jax.jit(step, in_shardings=in_sh).lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cost_of(compiled) -> tuple[float, float, dict]:
+    """Per-chip (flops, hbm bytes, collectives) from the transparent HLO
+    parser (repro.launch.hlo_analysis) — XLA's cost_analysis counts rolled
+    while bodies once and inflates bytes with fusion internals."""
+    from repro.launch.hlo_analysis import analyze
+    r = analyze(compiled.as_text())
+    coll = dict(r["collectives"])
+    coll["total"] = r["collective_bytes"]
+    coll["count"] = r.get("n_while", 0)
+    return r["flops"], r["bytes"], coll
+
+
+def _depth_variant(cfg, n_layers: int):
+    period = n_layers  # layers[:n] always forms its own period
+    import dataclasses as dc
+    return dc.replace(cfg, layers=cfg.layers[:n_layers])
+
+
+def lower_pair(arch: str, shape: str, *, multi_pod: bool = False,
+               opts: ShardOptions = None, remat: bool = True,
+               fast_attn: bool = False):
+    """Full-depth compile proves the pair lowers (and gives the memory
+    analysis); two *unrolled* shallow variants (1 and 2 periods) give exact
+    per-layer flops/bytes/collectives — XLA's cost_analysis counts a rolled
+    while body once, so full-model costs are reconstructed as
+    cost(1) + (reps-1) * [cost(2) - cost(1)]."""
+    from repro.models import attention_core as AC
+    from repro.models.model import period_of
+    cfg = get_config(arch)
+    ok, why = S.shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "skipped": why}
+    if arch == "gemma3-12b" and shape == "long_500k":
+        cfg = S.gemma_long_variant(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opts = opts or ShardOptions(
+        data_axes=("pod", "data") if multi_pod else ("data",))
+    info = S.SHAPES[shape]
+
+    import contextlib
+    fast = AC.fast_attention_math() if fast_attn else contextlib.nullcontext()
+    t0 = time.time()
+    with fast:
+        compiled = _compile_one(cfg, shape, mesh, opts, remat)
+    t1 = time.time()
+
+    period = period_of(cfg)
+    reps = cfg.n_layers // period
+    fast = AC.fast_attention_math() if fast_attn else contextlib.nullcontext()
+    with AC.unroll_for_analysis(), fast:
+        c1 = _compile_one(_depth_variant(cfg, period), shape, mesh, opts,
+                          remat)
+        f1, b1, coll1 = _cost_of(c1)
+        if reps > 1:
+            c2 = _compile_one(_depth_variant(cfg, 2 * period), shape, mesh,
+                              opts, remat)
+            f2, b2, coll2 = _cost_of(c2)
+        else:
+            f2, b2, coll2 = f1, b1, coll1
+    t2 = time.time()
+    k = reps - 1
+    # XLA may fuse/partition the two depth variants differently; a negative
+    # per-layer delta is measurement noise — clamp and flag.
+    noisy = (f2 < f1) or (b2 < b1)
+    flops = f1 + k * max(f2 - f1, 0.0)
+    bytes_hbm = b1 + k * max(b2 - b1, 0.0)
+    keys = set(coll1) | set(coll2)
+    coll = {key: coll1.get(key, 0) + k * max(
+        coll2.get(key, 0) - coll1.get(key, 0), 0) for key in keys}
+
+    mem = compiled.memory_analysis()
+    chips = int(np.prod(list(mesh.shape.values())))
+    mflops = model_flops(cfg, shape)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_hbm / HBM_BW,
+        "collective_s": coll["total"] / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    result = {
+        "arch": arch, "shape": shape, "mesh": "x".join(
+            f"{k}={v}" for k, v in mesh.shape.items()),
+        "chips": chips,
+        "compile_s": round(t1 - t0, 1),
+        "analysis_compile_s": round(t2 - t1, 1),
+        "delta_noise": noisy,
+        "per_chip": {
+            "hlo_flops": flops,
+            "hlo_bytes": bytes_hbm,
+            "collective_bytes": coll["total"],
+            "collectives": {k: v for k, v in coll.items()
+                            if k not in ("total",)},
+        },
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        } if mem is not None else None,
+        "roofline": {
+            **{k: round(v, 6) for k, v in terms.items()},
+            "dominant": dominant,
+            "model_flops_total": mflops,
+            "model_flops_per_chip": mflops / chips,
+            "useful_flops_frac": (mflops / chips) / flops if flops else None,
+        },
+    }
+    return result
+
+
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=ALL_SHAPES)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--zero-data", action="store_true")
+    ap.add_argument("--fast-attn", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in ALL_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    opts = None
+    tag = ""
+    if args.expert_parallel or args.zero_data:
+        opts = ShardOptions(
+            data_axes=("pod", "data") if args.multi_pod else ("data",),
+            expert_parallel=args.expert_parallel, zero_data=args.zero_data)
+        tag = ("_ep" if args.expert_parallel else "") + \
+              ("_zero" if args.zero_data else "")
+    if args.fast_attn:
+        tag += "_fast"
+    tag += args.tag
+    failures = 0
+    for arch, shape in pairs:
+        name = f"{arch}_{shape}_{'pod2' if args.multi_pod else 'pod1'}{tag}"
+        try:
+            res = lower_pair(arch, shape, multi_pod=args.multi_pod,
+                             opts=opts, remat=not args.no_remat,
+                             fast_attn=args.fast_attn)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            res = {"arch": arch, "shape": shape, "error": repr(e)[:2000]}
+            failures += 1
+        (outdir / f"{name}.json").write_text(json.dumps(res, indent=1))
+        if "error" in res:
+            print(f"[FAIL] {name}: {res['error'][:200]}", flush=True)
+        elif "skipped" in res:
+            print(f"[SKIP] {name}: {res['skipped']}", flush=True)
+        else:
+            r = res["roofline"]
+            print(f"[OK]   {name}: compile={res['compile_s']}s "
+                  f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s"
+                  f" coll={r['collective_s']:.4f}s dom={r['dominant']}",
+                  flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

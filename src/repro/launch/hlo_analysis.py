@@ -1,0 +1,206 @@
+"""Transparent HLO cost model for the dry-run roofline.
+
+``compiled.cost_analysis()`` proved unreliable for large partitioned
+modules (while bodies counted once, fusion-internal accesses inflating
+bytes), so the roofline terms are derived by parsing the *optimized,
+partitioned* HLO text directly — shapes there are per-chip:
+
+  * FLOPs      — every ``dot`` op: 2 x prod(result dims) x prod(contracting
+                 dims); dots inside fusion/while bodies are attributed to
+                 each call site (x trip count for bounded loops when the
+                 analysis variant is unrolled there are none that matter).
+  * HBM bytes  — post-fusion traffic: for each op at the top level of an
+                 executed computation, result bytes + operand bytes.
+                 Fusion internals don't touch HBM; a fusion's footprint is
+                 its operands + result, which is exactly how this counts.
+  * collective — result-shape bytes of all-reduce / all-gather /
+                 reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+                "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_DIMS_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+}
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                      r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+
+def _parse_shapes(text: str):
+    """All (dtype, dims) array shapes inside a type string (handles
+    tuples)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(text: str) -> int:
+    total = 0
+    for dt, shape in _parse_shapes(text):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: dict = field(default_factory=dict)      # name -> Op
+    order: list = field(default_factory=list)
+
+
+def parse_module(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and ("->" in line) and stripped.endswith("{"):
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.ops[op.name] = op
+            cur.order.append(op.name)
+    return {"computations": comps, "entry": entry}
+
+
+def _dot_flops(op: Op, comp: Computation, comps: dict) -> float:
+    res = _parse_shapes(op.type_str)
+    if not res:
+        return 0.0
+    n_res = 1
+    for d in res[0][1]:
+        n_res *= d
+    lhs_m = _DIMS_RE["lhs_c"].search(op.rest)
+    if not lhs_m:
+        return 2.0 * n_res            # unknown contraction; assume K=1
+    # find lhs operand shape
+    opnames = _OPERAND_RE.findall(op.rest.split("),")[0] + ")")
+    k = 1
+    if opnames:
+        lhs = comp.ops.get(opnames[0])
+        lhs_shape = None
+        if lhs is not None:
+            ls = _parse_shapes(lhs.type_str)
+            lhs_shape = ls[0][1] if ls else None
+        else:
+            # operand may be a parameter: shape is embedded inline
+            inline = _parse_shapes(op.rest)
+            lhs_shape = inline[0][1] if inline else None
+        if lhs_shape:
+            for i in (int(x) for x in lhs_m.group(1).split(",") if x):
+                if i < len(lhs_shape):
+                    k *= lhs_shape[i]
+    return 2.0 * n_res * k
+
+
+def _called(op: Op) -> list[str]:
+    names = []
+    for m in _CALL_RE.finditer(op.rest):
+        for n in m.group(1).split(","):
+            names.append(n.strip().lstrip("%"))
+    return names
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "reshape"}
+
+
+def analyze(hlo: str, while_trips: int = 1) -> dict:
+    """-> {flops, bytes, collective_bytes, collectives:{...}, n_while}.
+    ``while_trips`` multiplies the cost of while bodies (1 for the unrolled
+    analysis variants; the rolled full model is only used for memory)."""
+    mod = parse_module(hlo)
+    comps = mod["computations"]
+    memo: dict[tuple, tuple] = {}
+
+    def comp_cost(name: str, depth=0):
+        key = (name,)
+        if key in memo:
+            return memo[key]
+        c = comps.get(name)
+        if c is None or depth > 50:
+            return (0.0, 0.0, {}, 0)
+        flops = 0.0
+        nbytes = 0.0
+        coll: dict[str, float] = {}
+        n_while = 0
+        for opname in c.order:
+            op = c.ops[opname]
+            if op.kind == "dot":
+                flops += _dot_flops(op, c, comps)
+            if op.kind in COLLECTIVES or (
+                    op.kind.endswith("-start")
+                    and op.kind[:-6] in COLLECTIVES):
+                base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+                coll[base] = coll.get(base, 0.0) + _nbytes(op.type_str)
+            # bytes: top-level result + operands (resolved in-computation)
+            if op.kind not in _SKIP_BYTES and not op.kind.endswith("-done"):
+                nbytes += _nbytes(op.type_str)
+                for oname in _OPERAND_RE.findall(op.rest):
+                    src = c.ops.get(oname)
+                    if src is not None:
+                        nbytes += _nbytes(src.type_str)
+            mult = while_trips if op.kind == "while" else 1
+            if op.kind == "while":
+                n_while += 1
+            for callee in _called(op):
+                f2, b2, c2, w2 = comp_cost(callee, depth + 1)
+                flops += mult * f2
+                for k, v in c2.items():
+                    coll[k] = coll.get(k, 0.0) + mult * v
+                n_while += w2
+                if op.kind in ("while", "conditional", "call"):
+                    nbytes += mult * b2      # loop/call bodies touch HBM
+        memo[key] = (flops, nbytes, coll, n_while)
+        return memo[key]
+
+    f, b, coll, nw = comp_cost(mod["entry"])
+    return {"flops": f, "bytes": b,
+            "collective_bytes": sum(coll.values()),
+            "collectives": {k: int(v) for k, v in coll.items()},
+            "n_while": nw}

@@ -1,0 +1,21 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: one pod = 16x16 = 256 chips (data, model);
+    multi-pod = 2 pods = 512 chips with a leading 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_pipeline_mesh(p: int, tp: int, data: int = 1):
+    """Mesh for the STP pipeline runtime: (data, stage, model)."""
+    return jax.make_mesh((data, p, tp), ("data", "stage", "model"))

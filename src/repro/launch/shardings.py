@@ -1,0 +1,153 @@
+"""pjit sharding rules for the production mesh.
+
+Megatron-style tensor parallelism on the ``model`` axis (column/row parallel
+projections, vocab-parallel embedding + head), batch over (``pod``,)
+``data``.  Every rule checks divisibility and falls back to replication —
+e.g. hubert's 504-way vocab or xlstm's 4 heads cannot shard 16 ways; the
+roofline table then shows the cost and the perf loop decides what to do.
+
+Options (used by the §Perf hillclimb):
+  * ``expert_axis``: shard MoE expert dim E on ``model`` instead of the
+    expert FFN dim (expert parallelism),
+  * ``zero_data``: additionally shard the largest param dim over ``data``
+    (ZeRO-3-style; XLA inserts the all-gathers),
+  * ``seq_shard``: shard the sequence dim of activations over ``model``
+    (sequence parallelism for the norm/residual segments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShardOptions:
+    model_axis: str = "model"
+    data_axes: tuple = ("data",)          # ("pod", "data") for multi-pod
+    expert_parallel: bool = False
+    zero_data: bool = False
+    seq_shard: bool = False
+
+
+# param-name -> candidate shard axis (negative, from the right), in
+# preference order; first divisible wins.
+_COL = {"wg", "wu", "w1", "w_in_x", "w_in_z", "w_upx", "w_upz", "w_lm"}
+_ROW = {"wo", "wd", "w2", "w_out", "w_down"}
+
+
+def _axes_for(name: str, ndim: int, opts: ShardOptions, cfg: ModelConfig):
+    if opts.expert_parallel and name in ("wg", "wu", "wd") and ndim >= 3:
+        return [-3]                        # (E, d, f): shard experts
+    if name in ("wq", "wk", "wv"):
+        return [-3, -1] if ndim >= 3 else [-1]
+    if name in ("wi", "wf"):
+        return [-2]
+    if name in _COL:
+        return [-1]
+    if name in _ROW:
+        return [-2]
+    if name == "emb":
+        return [-2]                        # vocab-parallel embedding
+    return []
+
+
+def param_specs(tree, mesh: Mesh, cfg: ModelConfig,
+                opts: ShardOptions = ShardOptions()):
+    """PartitionSpec tree for a (stacked or unstacked) param pytree."""
+    msize = mesh.shape[opts.model_axis]
+    dsize = 1
+    for a in opts.data_axes:
+        dsize *= mesh.shape[a]
+
+    def one(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = k.key
+                break
+        spec = [None] * leaf.ndim
+        for ax in _axes_for(name, leaf.ndim, opts, cfg):
+            i = leaf.ndim + ax
+            if 0 <= i < leaf.ndim and leaf.shape[i] % msize == 0 \
+                    and spec[i] is None:
+                spec[i] = opts.model_axis
+                break
+        if opts.zero_data:
+            # ZeRO-3: shard the largest unsharded dim over data
+            order = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+            for i in order:
+                if spec[i] is None and leaf.shape[i] % dsize == 0 \
+                        and leaf.shape[i] >= dsize:
+                    spec[i] = opts.data_axes if len(opts.data_axes) > 1 \
+                        else opts.data_axes[0]
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_specs(batch_tree, opts: ShardOptions = ShardOptions(),
+                mesh: Optional[Mesh] = None):
+    """Shard the global batch dim over (pod, data) when divisible (a
+    long-context decode batch of 1 stays replicated)."""
+    ax = opts.data_axes if len(opts.data_axes) > 1 else opts.data_axes[0]
+    dsize = 1
+    if mesh is not None:
+        for a in opts.data_axes:
+            dsize *= mesh.shape[a]
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.shape[0] % max(dsize, 1) == 0:
+            spec[0] = ax
+        return P(*spec)
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_specs(cache_tree, cfg: ModelConfig, batch: int, mesh: Mesh,
+                opts: ShardOptions = ShardOptions()):
+    """Decode KV/state cache sharding: batch over data axes when divisible,
+    the KV slot (time) dim over ``model`` — single-query attention over a
+    slot-sharded cache becomes distributed flash-decode under GSPMD."""
+    msize = mesh.shape[opts.model_axis]
+    dsize = 1
+    for a in opts.data_axes:
+        dsize *= mesh.shape[a]
+    dax = opts.data_axes if len(opts.data_axes) > 1 else opts.data_axes[0]
+
+    def one(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = k.key
+                break
+        spec = [None] * leaf.ndim
+        if name == "pos":                          # (slots,) bookkeeping
+            return P(*spec)
+        # leading dims may include period-stack (reps,); batch dim is the
+        # first dim equal to `batch`.
+        bdim = None
+        if batch % dsize == 0 and batch >= dsize:
+            bdim = next((i for i, s in enumerate(leaf.shape)
+                         if s == batch), None)
+            if bdim is not None:
+                spec[bdim] = dax
+        if name in ("k", "v") and leaf.ndim >= 2:
+            t = leaf.ndim - 2                      # (..., slots, hd)
+            if t != bdim and leaf.shape[t] % msize == 0:
+                spec[t] = opts.model_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,160 @@
+"""Lowerable step functions + ShapeDtypeStruct input specs.
+
+These are what the dry-run lowers and what train.py / serve.py execute:
+
+  * ``train_step``   — loss + grads (mixed precision: bf16 compute, fp32
+                       master params) + AdamW update, remat'd layer scan.
+  * ``prefill_step`` — forward + last-token logits.
+  * ``serve_step``   — ONE new token against a seq_len KV/state cache.
+
+INPUT SHAPES (assignment):
+  train_4k       seq  4,096   global_batch 256   train_step
+  prefill_32k    seq 32,768   global_batch  32   prefill_step
+  decode_32k     seq 32,768   global_batch 128   serve_step
+  long_500k      seq 524,288  global_batch   1   serve_step (sub-quadratic)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptConfig, adamw_update
+from repro.tp.context import TPContext
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+# long_500k needs a sub-quadratic (bounded-memory) attention path:
+# SSM/hybrid state archs and the sliding-window dense arch qualify;
+# encoder-only hubert has no decode at all.  (DESIGN.md §5.)
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+LONG_OK_ARCHS = ("gemma3-12b",)           # 5:1 sliding-window locals
+
+
+def shape_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    kind = SHAPES[shape]["kind"]
+    if kind == "decode" and not cfg.causal:
+        return False, "encoder-only architecture: no autoregressive decode"
+    if shape == "long_500k":
+        if cfg.family in LONG_OK_FAMILIES or cfg.name in LONG_OK_ARCHS:
+            return True, ""
+        return False, "pure full-attention arch: quadratic-free path absent"
+    return True, ""
+
+
+def gemma_long_variant(cfg: ModelConfig) -> ModelConfig:
+    """long_500k variant of gemma3: global layers capped at the trained
+    context window so the ring-buffer cache stays bounded."""
+    layers = tuple(dataclasses.replace(l, window=l.window or cfg.max_seq)
+                   for l in cfg.layers)
+    return dataclasses.replace(cfg, layers=layers)
+
+
+# ---------------------------------------------------------------------------
+# Step builders (stacked-params layout, pjit path).
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig = OptConfig(), *,
+                    remat: bool = True, compute_dtype=jnp.bfloat16,
+                    tp: TPContext = TPContext()):
+    def train_step(params, opt_state, batch):
+        def loss_of(p):
+            pc = jax.tree.map(lambda x: x.astype(compute_dtype)
+                              if x.ndim >= 2 else x, p)
+            return M.loss_fn(pc, batch, cfg, remat=remat, tp=tp)
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        params2, opt_state2, gnorm = adamw_update(params, grads, opt_state,
+                                                  oc)
+        return params2, opt_state2, loss, gnorm
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+                      tp: TPContext = TPContext()):
+    def prefill(params, batch):
+        pc = jax.tree.map(lambda x: x.astype(compute_dtype)
+                          if x.ndim >= 2 else x, params)
+        return M.prefill_step(pc, batch, cfg, tp=tp)
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+                    tp: TPContext = TPContext()):
+    def serve(params, caches, batch, pos):
+        pc = jax.tree.map(lambda x: x.astype(compute_dtype)
+                          if x.ndim >= 2 else x, params)
+        return M.decode_step(pc, caches, batch, pos, cfg, tp=tp)
+
+    return serve
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no allocation).
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_sds(cfg: ModelConfig, shape: str) -> dict:
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    if info["kind"] == "decode":
+        if cfg.frontend == "text":
+            return {"tokens": _sds((b, 1), jnp.int32)}
+        return {"embeds": _sds((b, 1, cfg.d_model), jnp.float32)}
+    if cfg.frontend == "text":
+        out = {"tokens": _sds((b, s), jnp.int32)}
+    else:
+        out = {"embeds": _sds((b, s, cfg.d_model), jnp.float32)}
+    out["labels"] = _sds((b, s), jnp.int32)
+    return out
+
+
+def params_sds(cfg: ModelConfig) -> dict:
+    """Stacked-params ShapeDtypeStructs via eval_shape of the init."""
+    def init(key):
+        p = M.init_params(key, cfg)
+        return {"embed": p["embed"],
+                "blocks": M.stack_blocks(p["blocks"], M.period_of(cfg)),
+                "head": p["head"]}
+
+    return jax.eval_shape(init, _sds((2,), jnp.uint32))
+
+
+def opt_state_sds(params_tree) -> dict:
+    zeros = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                         params_tree)
+    return {"mu": zeros, "nu": zeros,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def caches_sds(cfg: ModelConfig, shape: str):
+    info = SHAPES[shape]
+    return jax.eval_shape(
+        lambda: M.init_caches_stacked(cfg, info["batch"], info["seq"]))
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """All lowering inputs for (cfg, shape): params (+opt/caches) + batch."""
+    info = SHAPES[shape]
+    out = {"params": params_sds(cfg), "batch": batch_specs_sds(cfg, shape)}
+    if info["kind"] == "train":
+        out["opt_state"] = opt_state_sds(out["params"])
+    if info["kind"] == "decode":
+        out["caches"] = caches_sds(cfg, shape)
+        out["pos"] = _sds((), jnp.int32)
+    return out

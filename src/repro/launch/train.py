@@ -1,0 +1,127 @@
+"""Training driver.
+
+Two runtimes share the model/optimizer/data substrates:
+
+  * ``pjit``     — data(+tensor)-parallel jit train_step (the dry-run's
+                   step, executed for real at reduced scale on CPU).
+  * ``pipeline`` — the paper's STP braided schedule on a (stage[, model])
+                   mesh via the shard_map executor, or the single-process
+                   reference executor when only one device exists.
+
+Usage (CPU example scale):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+      --steps 50 --runtime pjit --seq 128 --batch 8
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+      --runtime pipeline --schedule stp --pp 2 --microbatches 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.core.schedule import build as build_schedule
+from repro.data import DataConfig, make_batches, microbatches
+from repro.models import model as M
+from repro.optim import OptConfig, adamw_init, adamw_update
+from repro.pipeline.reference import pipeline_grads
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--runtime", choices=("pjit", "pipeline"),
+                    default="pjit")
+    ap.add_argument("--schedule", default="stp")
+    ap.add_argument("--pp", type=int, default=2)
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced(n_layers=args.layers, d_model=args.d_model,
+                          n_heads=4, vocab=512)
+    oc = OptConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                   total_steps=args.steps)
+    dc = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                    microbatches=args.microbatches)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    opt_state = adamw_init(params)
+    start = 0
+    if args.ckpt and Path(args.ckpt, "meta.json").exists():
+        (params, opt_state), start, _ = load_checkpoint(
+            args.ckpt, (params, opt_state))
+        print(f"resumed from {args.ckpt} @ step {start}")
+
+    if args.runtime == "pjit":
+        period = M.period_of(cfg)
+
+        @jax.jit
+        def step_fn(params_s, opt_s, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: M.loss_fn(p, batch, cfg))(params_s)
+            p2, o2, gn = adamw_update(params_s, grads, opt_s, oc)
+            return p2, o2, loss, gn
+
+        params_s = {"embed": params["embed"],
+                    "blocks": M.stack_blocks(params["blocks"], period),
+                    "head": params["head"]}
+        opt_s = adamw_init(params_s)
+        t0 = time.time()
+        for i, batch in enumerate(make_batches(cfg, dc, args.steps)):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params_s, opt_s, loss, gn = step_fn(params_s, opt_s, batch)
+            if (i + start) % args.log_every == 0:
+                tok_s = dc.global_batch * dc.seq_len * (i + 1) \
+                    / max(time.time() - t0, 1e-9)
+                print(f"step {i + start:5d} loss {float(loss):.4f} "
+                      f"gnorm {float(gn):.3f} tok/s {tok_s:,.0f}",
+                      flush=True)
+        params = {"embed": params_s["embed"],
+                  "blocks": M.unstack_blocks(params_s["blocks"], period),
+                  "head": params_s["head"]}
+        opt_state = opt_s
+    else:
+        tables, pl = build_schedule(args.schedule, args.pp,
+                                    args.microbatches)
+        t0 = time.time()
+        for i, batch in enumerate(make_batches(cfg, dc, args.steps)):
+            mbs = microbatches({k: jnp.asarray(v) for k, v in batch.items()},
+                               args.microbatches)
+            loss, grads = pipeline_grads(params, mbs, tables, pl, cfg)
+            params, opt_state, gn = adamw_update(params, grads, opt_state,
+                                                 oc)
+            if (i + start) % args.log_every == 0:
+                tok_s = dc.global_batch * dc.seq_len * (i + 1) \
+                    / max(time.time() - t0, 1e-9)
+                print(f"step {i + start:5d} loss {float(loss):.4f} "
+                      f"gnorm {float(gn):.3f} tok/s {tok_s:,.0f} "
+                      f"[{args.schedule} p={args.pp} m={args.microbatches}]",
+                      flush=True)
+
+    if args.ckpt:
+        save_checkpoint(args.ckpt, (params, opt_state),
+                        step=start + args.steps,
+                        extra={"arch": cfg.name})
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

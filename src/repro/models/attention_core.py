@@ -1,0 +1,393 @@
+"""Memory-sane attention core: pure-JNP flash attention (chunked online
+softmax) with a hand-rolled flash backward under ``jax.custom_vjp``.
+
+This is the *model-path* attention for every architecture (the paper uses
+FlashAttention-2 in all experiments, §5.1) and simultaneously the oracle the
+Pallas kernel in ``repro.kernels`` is validated against.
+
+Supports:
+  * GQA (kv_heads <= q_heads) — q heads are folded into the row dimension of
+    their kv group with an explicit position vector, so masks stay exact;
+  * causal masking, sliding-window masking (gemma3 locals), full (encoder);
+  * fp32 softmax accumulation regardless of input dtype.
+
+Memory is O(block · T) per program instead of O(S·T): safe to lower at
+seq_len = 524,288.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# Analysis mode (dry-run cost accounting): XLA's cost_analysis counts a
+# while-loop body ONCE regardless of trip count, so the dry-run lowers an
+# *unrolled* small-depth variant to get exact per-layer numbers.  Inside
+# `unroll_for_analysis()` every chunk loop below is unrolled and the block
+# sizes are enlarged to keep the op count bounded.
+_ANALYSIS = {"on": False, "qb": 2048, "kb": 4096}
+
+
+@contextlib.contextmanager
+def unroll_for_analysis(qb: int = 2048, kb: int = 4096):
+    old = dict(_ANALYSIS)
+    _ANALYSIS.update(on=True, qb=qb, kb=kb)
+    try:
+        yield
+    finally:
+        _ANALYSIS.update(old)
+
+
+def _unroll() -> bool:
+    return _ANALYSIS["on"]
+
+
+# Distribution hint: the collapsed (B*Hq) leading dim of the chunked
+# attention should shard over (data..., model).  GSPMD's propagation gives
+# up on the pad/reshape/moveaxis pipeline and replicates attention across
+# the model axis (a silent 16x flop blowup at TP=16); an explicit
+# with_sharding_constraint on the folded tensors pins it.  Set by the
+# launch layer around lowering; unset (default) for single-device tests.
+_BH_SHARD = {"axes": None}
+
+
+@contextlib.contextmanager
+def bh_sharding(axes):
+    old = _BH_SHARD["axes"]
+    _BH_SHARD["axes"] = axes
+    try:
+        yield
+    finally:
+        _BH_SHARD["axes"] = old
+
+
+def _constrain_bh(x):
+    axes = _BH_SHARD["axes"]
+    if axes is None:
+        return x
+    spec = jax.sharding.PartitionSpec(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# Fast-math mode (§Perf, beyond-paper): keep the score/probability blocks
+# in the input dtype and let the MXU accumulate in fp32
+# (preferred_element_type) instead of materializing fp32 copies of q/k/p.
+# Row statistics (max, logsumexp) stay fp32.  Off by default — tests and
+# the paper-faithful baseline use full fp32 intermediates.
+_FAST = {"on": False}
+
+
+@contextlib.contextmanager
+def fast_attention_math():
+    old = _FAST["on"]
+    _FAST["on"] = True
+    try:
+        yield
+    finally:
+        _FAST["on"] = old
+
+
+def _qk(qblk, kblk):
+    if _FAST["on"]:
+        return jax.lax.dot_general(
+            qblk, kblk, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    return jnp.einsum("bnd,btd->bnt", qblk.astype(jnp.float32),
+                      kblk.astype(jnp.float32))
+
+
+def _pv(p, vblk):
+    if _FAST["on"]:
+        return jax.lax.dot_general(
+            p.astype(vblk.dtype), vblk, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    return jnp.einsum("bnt,btd->bnd", p, vblk.astype(jnp.float32))
+
+
+def _scan(f, init, xs):
+    return jax.lax.scan(f, init, xs, unroll=len(jax.tree_util.tree_leaves(
+        xs)[0]) if _ANALYSIS["on"] else 1)
+
+
+def _map(f, xs):
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+
+    def step(_, x):
+        return None, f(x)
+
+    _, ys = jax.lax.scan(step, None, xs,
+                         unroll=n if _ANALYSIS["on"] else 1)
+    return ys
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _mask(qpos, kpos, *, causal: bool, window: Optional[int], n_k: int):
+    """(nq, nk) bool mask of *allowed* positions for one block pair."""
+    m = kpos[None, :] < n_k
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+def _flash_fwd_impl(q, k, v, qpos, *, causal, window, scale, qb, kb):
+    """q (BH, N, D) fp-any; k, v (BH, T, D); qpos (N,) int32.
+    Returns o (BH, N, D), lse (BH, N) fp32."""
+    BH, N, D = q.shape
+    T = k.shape[1]
+    qp = _pad_to(q, qb, 1)
+    qpp = _pad_to(qpos, qb, 0)
+    kp = _pad_to(k, kb, 1)
+    vp = _pad_to(v, kb, 1)
+    Np, Tp = qp.shape[1], kp.shape[1]
+    nqb, nkb = Np // qb, Tp // kb
+    kpos_full = jnp.arange(Tp, dtype=jnp.int32)
+
+    qp = qp.reshape(BH, nqb, qb, D)
+    qpp = qpp.reshape(nqb, qb)
+    kblocks = kp.reshape(BH, nkb, kb, D)
+    vblocks = vp.reshape(BH, nkb, kb, D)
+    kposb = kpos_full.reshape(nkb, kb)
+
+    def one_qblock(qblk, qposb):
+        # qblk (BH, qb, D), qposb (qb,)
+        def step(carry, inp):
+            m, l, acc = carry
+            kblk, vblk, kpos = inp
+            s = _qk(qblk, kblk) * scale
+            msk = _mask(qposb, kpos, causal=causal, window=window, n_k=T)
+            s = jnp.where(msk[None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk[None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + _pv(p, vblk)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((BH, qb), NEG_INF, jnp.float32),
+                jnp.zeros((BH, qb), jnp.float32),
+                jnp.zeros((BH, qb, D), jnp.float32))
+        (m, l, acc), _ = _scan(
+            step, init,
+            (jnp.moveaxis(kblocks, 1, 0), jnp.moveaxis(vblocks, 1, 0), kposb))
+        l_safe = jnp.maximum(l, 1e-30)
+        o = acc / l_safe[..., None]
+        lse = m + jnp.log(l_safe)
+        return o, lse
+
+    o, lse = _map(lambda args: one_qblock(*args),
+                  (jnp.moveaxis(qp, 1, 0), qpp))
+    # o (nqb, BH, qb, D) -> (BH, N, D)
+    o = jnp.moveaxis(o, 0, 1).reshape(BH, Np, D)[:, :N]
+    lse = jnp.moveaxis(lse, 0, 1).reshape(BH, Np)[:, :N]
+    return o, lse
+
+
+def _flash_bwd_impl(q, k, v, qpos, o, lse, do, *, causal, window, scale, qb, kb):
+    BH, N, D = q.shape
+    T = k.shape[1]
+    delta = jnp.einsum("bnd,bnd->bn", o.astype(jnp.float32),
+                       do.astype(jnp.float32))  # (BH, N)
+
+    qp = _pad_to(q, qb, 1).reshape(BH, -1, qb, D)
+    dop = _pad_to(do, qb, 1).reshape(BH, -1, qb, D)
+    lsep = _pad_to(lse, qb, 1).reshape(BH, -1, qb)
+    deltap = _pad_to(delta, qb, 1).reshape(BH, -1, qb)
+    qpp = _pad_to(qpos, qb, 0).reshape(-1, qb)
+    kp = _pad_to(k, kb, 1).reshape(BH, -1, kb, D)
+    vp = _pad_to(v, kb, 1).reshape(BH, -1, kb, D)
+    Tp = kp.shape[1] * kb
+    kposb = jnp.arange(Tp, dtype=jnp.int32).reshape(-1, kb)
+
+    def p_block(qblk, qposb, lseb, kblk, kpos):
+        s = _qk(qblk, kblk) * scale
+        msk = _mask(qposb, kpos, causal=causal, window=window, n_k=T)
+        p = jnp.exp(jnp.where(msk[None], s, NEG_INF) - lseb[..., None])
+        return jnp.where(msk[None], p, 0.0)
+
+    # --- dq: per q block, scan kv blocks -----------------------------------
+    def dq_qblock(args):
+        qblk, qposb, lseb, deltab, doblk = args
+
+        def step(dq, inp):
+            kblk, vblk, kpos = inp
+            p = p_block(qblk, qposb, lseb, kblk, kpos)
+            dp = _qk(doblk, vblk)
+            ds = p * (dp - deltab[..., None])
+            return dq + _pv(ds, kblk) * scale, None
+
+        dq0 = jnp.zeros(qblk.shape, jnp.float32)
+        dq, _ = _scan(step, dq0, (jnp.moveaxis(kp, 1, 0),
+                                  jnp.moveaxis(vp, 1, 0), kposb))
+        return dq
+
+    dq = _map(dq_qblock, (jnp.moveaxis(qp, 1, 0), qpp,
+                          jnp.moveaxis(lsep, 1, 0),
+                          jnp.moveaxis(deltap, 1, 0),
+                          jnp.moveaxis(dop, 1, 0)))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(BH, -1, D)[:, :N].astype(q.dtype)
+
+    # --- dk, dv: per kv block, scan q blocks --------------------------------
+    def dkv_kblock(args):
+        kblk, vblk, kpos = args
+
+        def step(carry, inp):
+            dk, dv = carry
+            qblk, qposb, lseb, deltab, doblk = inp
+            p = p_block(qblk, qposb, lseb, kblk, kpos)
+            dv = dv + _tp_pv(p, doblk)
+            dp = _qk(doblk, vblk)
+            ds = p * (dp - deltab[..., None])
+            dk = dk + _tp_pv(ds, qblk) * scale
+            return (dk, dv), None
+
+        z = jnp.zeros(kblk.shape, jnp.float32)
+        (dk, dv), _ = _scan(
+            step, (z, z),
+            (jnp.moveaxis(qp, 1, 0), qpp, jnp.moveaxis(lsep, 1, 0),
+             jnp.moveaxis(deltap, 1, 0), jnp.moveaxis(dop, 1, 0)))
+        return dk, dv
+
+    dk, dv = _map(dkv_kblock, (jnp.moveaxis(kp, 1, 0),
+                               jnp.moveaxis(vp, 1, 0), kposb))
+    dk = jnp.moveaxis(dk, 0, 1).reshape(BH, -1, D)[:, :T].astype(k.dtype)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(BH, -1, D)[:, :T].astype(v.dtype)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public GQA entry point.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, q_offset: int = 0,
+                    qb: int = 256, kb: int = 512):
+    """q (B, Hq, S, D); k, v (B, Hkv, T, D) with Hq % Hkv == 0.
+
+    ``q_offset``: absolute position of q[..., 0, :] relative to k (decode with
+    a KV cache passes T - S)."""
+    o, _ = _flash_gqa_fwd(q, k, v, causal, window, scale, q_offset, qb, kb)
+    return o
+
+
+def _expand_gqa(q, k, v):
+    """GQA by kv broadcast to Hq heads, collapsed to (B*Hq, ., D).
+
+    The (B, Hq) merge keeps a GSPMD-expressible sharding (batch over data x
+    heads over model); the earlier fold to (B*Hkv, G*S, D) could NOT shard
+    16 ways when Hkv < 16, which silently replicated all attention compute
+    across the model axis (a 16x flop bug caught by the dry-run roofline)."""
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = _constrain_bh(q.reshape(B * Hq, S, D))
+    kf = _constrain_bh(jnp.broadcast_to(k[:, :, None], (B, Hkv, G, T, D))
+                       .reshape(B * Hq, T, D))
+    vf = _constrain_bh(jnp.broadcast_to(v[:, :, None], (B, Hkv, G, T, D))
+                       .reshape(B * Hq, T, D))
+    return qf, kf, vf, (B, Hq, Hkv, G, S, D)
+
+
+def _flash_gqa_fwd(q, k, v, causal, window, scale, q_offset, qb, kb):
+    if _ANALYSIS["on"]:
+        qb, kb = _ANALYSIS["qb"], _ANALYSIS["kb"]
+    qf, kf, vf, dims = _expand_gqa(q, k, v)
+    B, Hq, Hkv, G, S, D = dims
+    scale = scale if scale is not None else D ** -0.5
+    qpos = jnp.arange(S, dtype=jnp.int32) + q_offset
+    o, lse = _flash_fwd_impl(qf, kf, vf, qpos, causal=causal, window=window,
+                             scale=scale, qb=min(qb, max(S, 16)), kb=kb)
+    o = _constrain_bh(o).reshape(B, Hq, S, D).astype(q.dtype)
+    # o rides in the residuals: under layer-remat it is recomputed by the
+    # rematted forward anyway, and the backward rule then skips a third
+    # full attention pass (one of the §Perf hillclimb wins).
+    return o, (q, k, v, o, lse)
+
+
+def _flash_gqa_fwd_rule(q, k, v, causal, window, scale, q_offset, qb, kb):
+    o, res = _flash_gqa_fwd(q, k, v, causal, window, scale, q_offset, qb, kb)
+    return o, res
+
+
+def _flash_gqa_bwd_rule(causal, window, scale, q_offset, qb, kb, res, do):
+    if _ANALYSIS["on"]:
+        qb, kb = _ANALYSIS["qb"], _ANALYSIS["kb"]
+    q, k, v, o, lse = res
+    qf, kf, vf, dims = _expand_gqa(q, k, v)
+    B, Hq, Hkv, G, S, D = dims
+    scale = scale if scale is not None else D ** -0.5
+    qpos = jnp.arange(S, dtype=jnp.int32) + q_offset
+    dof = _constrain_bh(do.reshape(B * Hq, S, D))
+    lse = _constrain_bh(lse)
+    of = _constrain_bh(o.reshape(B * Hq, S, D))
+    dq, dk, dv = _flash_bwd_impl(qf, kf, vf, qpos, of, lse, dof,
+                                 causal=causal, window=window, scale=scale,
+                                 qb=min(qb, max(S, 16)), kb=kb)
+    dq = _constrain_bh(dq).reshape(B, Hq, S, D)
+    dk = _constrain_bh(dk).reshape(B, Hkv, G, -1, D).sum(axis=2) \
+        .astype(k.dtype)
+    dv = _constrain_bh(dv).reshape(B, Hkv, G, -1, D).sum(axis=2) \
+        .astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_gqa_fwd_rule, _flash_gqa_bwd_rule)
+
+
+def flash_attention_inference(q, k, v, causal=True, window=None, scale=None,
+                              q_offset=0, qb: int = 256, kb: int = 512):
+    """Forward-only path for decode/prefill: ``q_offset`` may be a *traced*
+    position scalar (custom_vjp nondiff args must be static, so the decode
+    paths with a dynamic KV-cache offset use this entry point)."""
+    o, _ = _flash_gqa_fwd(q, k, v, causal, window, scale, q_offset, qb, kb)
+    return o
+
+
+def reference_attention(q, k, v, causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None, q_offset: int = 0):
+    """Naive O(S·T) oracle used in tests only."""
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    m = jnp.ones((S, T), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+def _tp_pv(p, blk):
+    """transposed pv: (b, n, t) x (b, n, d) -> (b, t, d)."""
+    import jax, jax.numpy as jnp
+    if _FAST["on"]:
+        return jax.lax.dot_general(
+            p.astype(blk.dtype), blk, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    return jnp.einsum("bnt,bnd->btd", p, blk.astype(jnp.float32))

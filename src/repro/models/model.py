@@ -1,0 +1,579 @@
+"""Model assembly: layers → chunks → full models.
+
+Three execution paths share the unit definitions (single source of truth):
+
+* **pjit path** (`forward`, `loss_fn`): global-view arrays, XLA SPMD inserts
+  collectives from sharding constraints.  Layers run under `lax.scan` over
+  the architecture's *period* (gemma3's 5:1, jamba's 1:7+MoE interleave) so
+  compile time is O(period), not O(depth).
+* **unit path** (`layer_fwd` / `layer_bwd_act` / `layer_bwd_weight`,
+  `chunk_*`): the paper's F/B/W decomposition used by the STP pipeline
+  executor and the braided blocks, with explicit TP collectives.
+* **serve path** (`decode_layer_step`, prefill helpers): single-token decode
+  with KV caches (attention) / recurrent states (SSM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autograd as ag
+from repro.models import ssm, units
+from repro.models.attention_core import flash_attention_inference
+from repro.models.config import LayerSpec, ModelConfig
+from repro.tp.context import TPContext
+
+
+# ---------------------------------------------------------------------------
+# Mixer dispatch tables.
+# ---------------------------------------------------------------------------
+
+def _attn_fwd(p, tp, x_ln, x_res, rope, spec, cfg):
+    return units.attn_fwd(p, tp, x_ln, x_res, rope, spec, cfg)
+
+
+def _ssm_fwd(fn):
+    def wrapped(p, tp, x_ln, x_res, rope, spec, cfg):
+        return fn(p, tp, x_ln, x_res, spec, cfg)
+    return wrapped
+
+
+MIXER_FWD = {
+    "attn": _attn_fwd,
+    "mamba": _ssm_fwd(ssm.mamba_fwd),
+    "mlstm": _ssm_fwd(ssm.mlstm_fwd),
+    "slstm": _ssm_fwd(ssm.slstm_fwd),
+}
+MIXER_BWD_ACT = {
+    "attn": units.attn_bwd_act,
+    "mamba": ssm.mamba_bwd_act,
+    "mlstm": ssm.mlstm_bwd_act,
+    "slstm": ssm.slstm_bwd_act,
+}
+MIXER_BWD_W = {
+    "attn": units.attn_bwd_weight,
+    "mamba": ssm.mamba_bwd_weight,
+    "mlstm": ssm.mlstm_bwd_weight,
+    "slstm": ssm.slstm_bwd_weight,
+}
+
+
+def _mlp_fns(spec: LayerSpec):
+    if spec.mlp == "moe":
+        return units.moe_fwd, units.moe_bwd_act, units.moe_bwd_weight
+    return units.mlp_fwd, units.mlp_bwd_act, units.mlp_bwd_weight
+
+
+# ---------------------------------------------------------------------------
+# Layer-level F / B / W  (paper §3: Pre-Attn, Attn, Pre-MLP, MLP units).
+# ---------------------------------------------------------------------------
+
+def layer_fwd(params, tp: TPContext, x, rope, spec: LayerSpec,
+              cfg: ModelConfig):
+    x_ln, c_ln1 = units.prenorm_fwd(params["ln1"], x, cfg)
+    y1, c_mix = MIXER_FWD[spec.mixer](params["mixer"], tp, x_ln, x, rope,
+                                      spec, cfg)
+    if spec.mlp == "none":
+        return y1, (c_ln1, c_mix, None, None)
+    mlp_fwd, _, _ = _mlp_fns(spec)
+    x_ln2, c_ln2 = units.prenorm_fwd(params["ln2"], y1, cfg)
+    y2, c_mlp = mlp_fwd(params["mlp"], tp, x_ln2, y1, spec, cfg)
+    return y2, (c_ln1, c_mix, c_ln2, c_mlp)
+
+
+def layer_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
+                  cfg: ModelConfig):
+    c_ln1, c_mix, c_ln2, c_mlp = ctx
+    joint = {}
+    wtape = {}
+    if spec.mlp != "none":
+        _, mlp_bwd_act, _ = _mlp_fns(spec)
+        gx_ln2, g_res2, wt_mlp, j_mlp = mlp_bwd_act(params["mlp"], tp, c_mlp,
+                                                    gy, spec, cfg)
+        g_from_ln2, j_ln2 = units.prenorm_bwd(c_ln2, gx_ln2, cfg)
+        gy = g_from_ln2 + g_res2
+        wtape["mlp"] = wt_mlp
+        if j_mlp:
+            joint["mlp"] = j_mlp
+        joint["ln2"] = j_ln2
+    gx_ln1, g_res1, wt_mix, j_mix = MIXER_BWD_ACT[spec.mixer](
+        params["mixer"], tp, c_mix, gy, spec, cfg)
+    g_from_ln1, j_ln1 = units.prenorm_bwd(c_ln1, gx_ln1, cfg)
+    gx = g_from_ln1 + g_res1
+    wtape["mixer"] = wt_mix
+    if j_mix:
+        joint["mixer"] = j_mix
+    joint["ln1"] = j_ln1
+    return gx, wtape, joint
+
+
+def layer_bwd_weight(wtape, spec: LayerSpec):
+    out = {"mixer": MIXER_BWD_W[spec.mixer](wtape["mixer"])}
+    if "mlp" in wtape:
+        _, _, mlp_bwd_w = _mlp_fns(spec)
+        out["mlp"] = mlp_bwd_w(wtape["mlp"])
+    return out
+
+
+# --- chunk = a contiguous group of layers assigned to one virtual stage ----
+
+def chunk_fwd(layer_params, tp, x, rope, specs, cfg):
+    ctxs = []
+    for p, spec in zip(layer_params, specs):
+        x, c = layer_fwd(p, tp, x, rope, spec, cfg)
+        ctxs.append(c)
+    return x, ctxs
+
+
+def chunk_bwd_act(layer_params, tp, ctxs, gy, specs, cfg):
+    wtapes, joints = [], []
+    for p, c, spec in zip(reversed(layer_params), reversed(ctxs),
+                          reversed(specs)):
+        gy, wt, j = layer_bwd_act(p, tp, c, gy, spec, cfg)
+        wtapes.append(wt)
+        joints.append(j)
+    return gy, wtapes[::-1], joints[::-1]
+
+
+def chunk_bwd_weight(wtapes, specs):
+    return [layer_bwd_weight(wt, spec) for wt, spec in zip(wtapes, specs)]
+
+
+# ---------------------------------------------------------------------------
+# Embedding & head units.
+# ---------------------------------------------------------------------------
+
+def embed_fwd(params, batch, cfg: ModelConfig):
+    """batch: {"tokens": (b,s) int} or {"embeds": (b,s,d)} per cfg.frontend."""
+    if cfg.frontend == "text":
+        tokens = batch["tokens"]
+        x = jnp.take(params["emb"], tokens, axis=0)
+        return x, ("emb", tokens)
+    embeds = batch["embeds"]
+    x, _ = ag.linear_fwd(embeds, params["proj"])
+    return x, ("proj", embeds)
+
+
+def embed_bwd_weight(params, ctx, gx):
+    kind, saved = ctx
+    if kind == "emb":
+        demb = jnp.zeros_like(params["emb"]).at[saved].add(gx)
+        return {"emb": demb}
+    return {"proj": ag.linear_bwd_weight(saved, gx)}
+
+
+def head_fwd(params, tp: TPContext, x, labels, cfg: ModelConfig):
+    """Final norm + LM head + vocab-parallel cross entropy.
+
+    labels (b, s) int32; positions with label < 0 are masked out.
+    Returns (loss, ctx).  In unit (shard_map) mode the head weight is
+    column-parallel over vocab and the softmax statistics are reduced with
+    pmax/psum (Megatron-style vocab-parallel CE)."""
+    x_ln, c_ln = units.prenorm_fwd(params["ln_f"], x, cfg)
+    logits, _ = ag.linear_fwd(x_ln, params["w_lm"])
+    lf = logits.astype(jnp.float32)
+    m = tp.pmax(jax.lax.stop_gradient(lf.max(axis=-1)))
+    sumexp = tp.psum(jnp.exp(lf - m[..., None]).sum(axis=-1))
+    lse = jnp.log(sumexp) + m
+    v_local = logits.shape[-1]
+    off = tp.axis_index() * v_local
+    lab_loc = labels - off
+    inb = (lab_loc >= 0) & (lab_loc < v_local)
+    picked_loc = jnp.take_along_axis(
+        lf, jnp.clip(lab_loc, 0, v_local - 1)[..., None], axis=-1)[..., 0]
+    picked = tp.psum(jnp.where(inb, picked_loc, 0.0))
+    valid = (labels >= 0).astype(jnp.float32)
+    nvalid = jnp.maximum(valid.sum(), 1.0)
+    loss = ((lse - picked) * valid).sum() / nvalid
+    ctx = (c_ln, x_ln, logits, lse, lab_loc, inb, valid, nvalid)
+    return loss, ctx
+
+
+def head_bwd_act(params, tp: TPContext, ctx, g_loss, cfg: ModelConfig):
+    c_ln, x_ln, logits, lse, lab_loc, inb, valid, nvalid = ctx
+    v_local = logits.shape[-1]
+    p = jnp.exp(logits.astype(jnp.float32) - lse[..., None])
+    onehot = jax.nn.one_hot(jnp.where(inb, lab_loc, -1), v_local,
+                            dtype=jnp.float32)
+    g_logits = ((p - onehot) * (valid / nvalid)[..., None]
+                * g_loss).astype(logits.dtype)
+    gx_ln = tp.psum(ag.linear_bwd_act(g_logits, params["w_lm"]))
+    gx, j_ln = units.prenorm_bwd(c_ln, gx_ln, cfg)
+    wtape = {"w_lm": ag.tape_entry(x_ln, g_logits)}
+    return gx, wtape, {"ln_f": j_ln}
+
+
+def head_bwd_weight(wtape):
+    return {"w_lm": ag.tape_weight(wtape["w_lm"])}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init.
+# ---------------------------------------------------------------------------
+
+def _norm_params(cfg, d):
+    if cfg.norm == "rmsnorm":
+        return {"g": jnp.ones((d,), jnp.float32)}
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig, scale_out: float):
+    d, hd = cfg.d_model, cfg.hd
+    ks = iter(jax.random.split(key, 24))
+    nrm = lambda *shape, s=0.02: (jax.random.normal(next(ks), shape,
+                                                    jnp.float32) * s)
+    p = {"ln1": _norm_params(cfg, d)}
+    if spec.mixer == "attn":
+        mix = {"wq": nrm(d, cfg.n_heads * hd), "wk": nrm(d, cfg.kv_heads * hd),
+               "wv": nrm(d, cfg.kv_heads * hd),
+               "wo": nrm(cfg.n_heads * hd, d, s=scale_out)}
+        if spec.qk_norm:
+            mix["qg"] = jnp.ones((hd,), jnp.float32)
+            mix["kg"] = jnp.ones((hd,), jnp.float32)
+    elif spec.mixer == "mamba":
+        di, r, n, ck = ssm.mamba_dims(cfg)
+        mix = {"w_in_x": nrm(d, di), "w_in_z": nrm(d, di),
+               "w_out": nrm(di, d, s=scale_out),
+               "core": {
+                   "conv_w": nrm(di, ck, s=0.1),
+                   "conv_b": jnp.zeros((di,), jnp.float32),
+                   "w_x": nrm(di, r + 2 * n),
+                   "w_dt": nrm(r, di, s=r ** -0.5),
+                   "dt_bias": jnp.log(jnp.expm1(
+                       jnp.full((di,), 0.01, jnp.float32))),
+                   "A_log": jnp.log(jnp.tile(
+                       jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+                   "D": jnp.ones((di,), jnp.float32)}}
+    elif spec.mixer == "mlstm":
+        du, nh, mhd = ssm.mlstm_dims(cfg)
+        mix = {"w_upx": nrm(d, du), "w_upz": nrm(d, du),
+               "wq": nrm(nh, mhd, mhd, s=mhd ** -0.5),
+               "wk": nrm(nh, mhd, mhd, s=mhd ** -0.5),
+               "wv": nrm(nh, mhd, mhd, s=mhd ** -0.5),
+               "wi": nrm(nh, mhd, s=0.1), "wf": nrm(nh, mhd, s=0.1) + 3.0,
+               "w_down": nrm(du, d, s=scale_out)}
+    elif spec.mixer == "slstm":
+        du, nh, shd = ssm.slstm_dims(cfg)
+        mix = {"w_x": nrm(d, 4 * du),
+               "core": {"r": nrm(4, nh, shd, shd, s=shd ** -0.5)},
+               "w_down": nrm(du, d, s=scale_out)}
+    else:
+        raise ValueError(spec.mixer)
+    p["mixer"] = mix
+    if spec.mlp != "none":
+        p["ln2"] = _norm_params(cfg, d)
+        if spec.mlp == "moe":
+            moe = cfg.moe
+            E, f = moe.num_experts, moe.d_ff
+            mlp = {"router": nrm(d, E),
+                   "wg": nrm(E, d, f), "wd": nrm(E, f, d, s=scale_out)}
+            if moe.gated:
+                mlp["wu"] = nrm(E, d, f)
+        elif spec.mlp == "gated":
+            mlp = {"wg": nrm(d, cfg.d_ff), "wu": nrm(d, cfg.d_ff),
+                   "wd": nrm(cfg.d_ff, d, s=scale_out)}
+        else:
+            mlp = {"w1": nrm(d, cfg.d_ff), "w2": nrm(cfg.d_ff, d, s=scale_out)}
+        p["mlp"] = mlp
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    """Canonical (per-layer list, unstacked, full/unsharded) parameters."""
+    n = cfg.n_layers
+    keys = jax.random.split(key, n + 2)
+    scale_out = 0.02 / max(1.0, (2 * n) ** 0.5)
+    embed = {}
+    if cfg.frontend == "text" or cfg.causal:
+        embed["emb"] = jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model),
+                                         jnp.float32) * 0.02
+    if cfg.frontend == "embed":
+        embed["proj"] = jax.random.normal(keys[-2], (cfg.d_model, cfg.d_model),
+                                          jnp.float32) * 0.02
+    blocks = [init_layer(keys[i], cfg.layers[i], cfg, scale_out)
+              for i in range(n)]
+    head = {"ln_f": _norm_params(cfg, cfg.d_model),
+            "w_lm": jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab),
+                                      jnp.float32) * 0.02}
+    return {"embed": embed, "blocks": blocks, "head": head}
+
+
+# ---------------------------------------------------------------------------
+# Period detection & stacking for the pjit scan path.
+# ---------------------------------------------------------------------------
+
+def period_of(cfg: ModelConfig) -> int:
+    n = cfg.n_layers
+    for p in range(1, n + 1):
+        if n % p == 0 and all(cfg.layers[i] == cfg.layers[i % p]
+                              for i in range(n)):
+            return p
+    return n
+
+
+def stack_blocks(blocks, period: int):
+    """[per-layer dicts] -> [per-position-in-period dicts with leading reps]."""
+    reps = len(blocks) // period
+    out = []
+    for pos in range(period):
+        sl = [blocks[r * period + pos] for r in range(reps)]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *sl))
+    return out
+
+
+def unstack_blocks(stacked, period: int):
+    reps = jax.tree_util.tree_leaves(stacked[0])[0].shape[0]
+    blocks = []
+    for r in range(reps):
+        for pos in range(period):
+            blocks.append(jax.tree.map(lambda x: x[r], stacked[pos]))
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# pjit-path forward / loss.
+# ---------------------------------------------------------------------------
+
+def _rope_for(cfg: ModelConfig, seq: int, offset: int = 0):
+    cos, sin = units.rope_tables(seq + offset, cfg.hd, cfg.rope_theta)
+    return cos[offset:], sin[offset:]
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = False,
+            tp: TPContext = TPContext()):
+    """Full-model forward to final hidden states.  `params["blocks"]` must be
+    the *stacked* form (see `stack_blocks`)."""
+    period = period_of(cfg)
+    specs = cfg.layers[:period]
+    x, _ = embed_fwd(params["embed"], batch, cfg)
+    seq = x.shape[1]
+    rope = _rope_for(cfg, seq)
+
+    def body(x, sliced):
+        for pos in range(period):
+            x, _ = layer_fwd(sliced[pos], tp, x, rope, specs[pos], cfg)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    from repro.models import attention_core as AC
+    reps = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+    x, _ = jax.lax.scan(body, x, params["blocks"],
+                        unroll=reps if AC._ANALYSIS["on"] else 1)
+    return x
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = False,
+            tp: TPContext = TPContext()):
+    x = forward(params, batch, cfg, remat=remat, tp=tp)
+    loss, _ = head_fwd(params["head"], tp, x, batch["labels"], cfg)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Serving: per-layer decode step with caches, and prefill.
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                     max_seq: int, dtype=jnp.bfloat16):
+    """Attention layers hold a KV ring buffer: full ``max_seq`` slots for
+    global layers, ``window`` slots for sliding-window layers (gemma3
+    locals) — this is what makes windowed archs long-context-decodable.
+    Each slot remembers its absolute position (-1 = empty) so masking stays
+    exact after wraparound.  SSM mixers carry O(1) recurrent states."""
+    if spec.mixer == "attn":
+        slots = max_seq if spec.window is None else min(max_seq, spec.window)
+        shape = (batch, cfg.kv_heads, slots, cfg.hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "pos": jnp.full((slots,), -1, jnp.int32)}
+    if spec.mixer == "mamba":
+        return ssm.mamba_init_state(cfg, batch, dtype=dtype)
+    if spec.mixer == "mlstm":
+        return ssm.mlstm_init_state(cfg, batch)
+    if spec.mixer == "slstm":
+        return ssm.slstm_init_state(cfg, batch)
+    raise ValueError(spec.mixer)
+
+
+def _attn_decode(params, tp, x_ln, x_res, cache, pos, spec, cfg):
+    """One-token attention over the KV ring buffer.
+
+    Single-query attention is linear in cache length, so it is expressed as
+    plain (GSPMD-shardable) einsums with explicit fp32 softmax statistics —
+    under pjit the cache shards along its slot axis across ``model`` (and
+    ``data``) ranks and XLA inserts the max/sum all-reduces, i.e.
+    distributed flash-decode falls out of the sharding annotations."""
+    b = x_ln.shape[0]
+    hd = cfg.hd
+    q = jnp.einsum("bsd,df->bsf", x_ln, params["wq"])
+    k = jnp.einsum("bsd,df->bsf", x_ln, params["wk"])
+    v = jnp.einsum("bsd,df->bsf", x_ln, params["wv"])
+    nh_l, kv_l = q.shape[-1] // hd, k.shape[-1] // hd
+    qh = q.reshape(b, 1, nh_l, hd).transpose(0, 2, 1, 3)    # (b, h, 1, hd)
+    kh = k.reshape(b, 1, kv_l, hd).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, 1, kv_l, hd).transpose(0, 2, 1, 3)
+    if spec.qk_norm:
+        qh = ag.rmsnorm(params["qg"], qh)
+        kh = ag.rmsnorm(params["kg"], kh)
+    if cfg.use_rope:
+        cos, sin = units.rope_at(pos, hd, cfg.rope_theta)
+        qh = units.apply_rope(qh, cos, sin)
+        kh = units.apply_rope(kh, cos, sin)
+    slots = cache["k"].shape[2]
+    slot = pos % slots
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], kh.astype(cache["k"].dtype), slot, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], vh.astype(cache["v"].dtype), slot, axis=2)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos[None].astype(jnp.int32), slot, axis=0)
+    # GQA: fold q heads onto kv groups
+    g = nh_l // kv_l
+    qg = qh.reshape(b, kv_l, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg,
+                   ck.astype(jnp.float32)) * hd ** -0.5   # (b, kv, g, T)
+    ok = (cpos >= 0) & (cpos <= pos)
+    if spec.window is not None:
+        ok &= (pos - cpos) < spec.window
+    s = jnp.where(ok[None, None, None, :], s, -1e30)
+    m = jax.lax.stop_gradient(s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m)
+    p = jnp.where(ok[None, None, None, :], p, 0.0)
+    o = jnp.einsum("bkgt,bktd->bkgd", p, cv.astype(jnp.float32)) \
+        / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    a = o.reshape(b, nh_l, 1, hd).transpose(0, 2, 1, 3) \
+        .reshape(b, 1, nh_l * hd).astype(x_ln.dtype)
+    part = jnp.einsum("bsd,df->bsf", a, params["wo"])
+    y = tp.fuse_residual(part, x_res)
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+def decode_layer_step(params, tp: TPContext, x, cache, pos, spec: LayerSpec,
+                      cfg: ModelConfig):
+    """One-token step through one layer. x (b, 1, d)."""
+    x_ln, _ = units.prenorm_fwd(params["ln1"], x, cfg)
+    if spec.mixer == "attn":
+        y1, new_cache = _attn_decode(params["mixer"], tp, x_ln, x, cache,
+                                     pos, spec, cfg)
+    elif spec.mixer == "mamba":
+        y1, new_cache = ssm.mamba_step(params["mixer"], tp, x_ln, x, cache, cfg)
+    elif spec.mixer == "mlstm":
+        y1, new_cache = ssm.mlstm_step(params["mixer"], tp, x_ln, x, cache, cfg)
+    elif spec.mixer == "slstm":
+        y1, new_cache = ssm.slstm_step(params["mixer"], tp, x_ln, x, cache, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.mlp == "none":
+        return y1, new_cache
+    x_ln2, _ = units.prenorm_fwd(params["ln2"], y1, cfg)
+    if spec.mlp == "moe":
+        y2 = moe_decode(params["mlp"], tp, x_ln2, y1, cfg)
+    else:
+        y2, _ = units.mlp_fwd(params["mlp"], tp, x_ln2, y1, spec, cfg)
+    return y2, new_cache
+
+
+def moe_decode(params, tp: TPContext, x_ln, x_res, cfg: ModelConfig):
+    """Decode-path MoE: gather the top-k experts' weights per token instead of
+    capacity dispatch — the true decode roofline is reading k experts' weights
+    per token (memory-bound), not an (E × capacity) GEMM."""
+    moe = cfg.moe
+    b, s, d = x_ln.shape
+    logits = jnp.einsum("bsd,de->bse", x_ln, params["router"])
+    gates, idx = jax.lax.top_k(logits, moe.top_k)
+    gates = jax.nn.softmax(gates.astype(jnp.float32), axis=-1)
+    idx = idx.reshape(b * s, moe.top_k)
+    xt = x_ln.reshape(b * s, d)
+    wg = jnp.take(params["wg"], idx, axis=0)          # (T, k, d, f)
+    wd = jnp.take(params["wd"], idx, axis=0)          # (T, k, f, d)
+    if moe.gated:
+        wu = jnp.take(params["wu"], idx, axis=0)
+        h = jax.nn.silu(jnp.einsum("td,tkdf->tkf", xt, wg)) \
+            * jnp.einsum("td,tkdf->tkf", xt, wu)
+    else:
+        h = jax.nn.gelu(jnp.einsum("td,tkdf->tkf", xt, wg))
+    out = jnp.einsum("tkf,tkfd->tkd", h, wd)
+    part = jnp.einsum("tkd,tk->td", out,
+                      gates.reshape(b * s, moe.top_k).astype(out.dtype))
+    part = part.reshape(b, s, d).astype(x_res.dtype)
+    return tp.psum(part) + x_res if tp.axis else part + x_res
+
+
+def init_caches_stacked(cfg: ModelConfig, batch: int, max_seq: int,
+                        dtype=jnp.bfloat16):
+    """Decode caches in the period-stacked layout used by the scan paths:
+    list (period) of cache trees with a leading (reps,) dim."""
+    period = period_of(cfg)
+    reps = cfg.n_layers // period
+    out = []
+    for pos in range(period):
+        one = init_layer_cache(cfg.layers[pos], cfg, batch, max_seq, dtype)
+        out.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one))
+    return out
+
+
+def decode_step(params, caches, batch, pos, cfg: ModelConfig,
+                tp: TPContext = TPContext()):
+    """One-token decode through the whole model (stacked params/caches).
+
+    batch: {"tokens": (b, 1)} or {"embeds": (b, 1, d)}; pos: traced scalar.
+    Returns (next_token (b,), logits (b, vocab), new_caches)."""
+    period = period_of(cfg)
+    specs = cfg.layers[:period]
+    x, _ = embed_fwd(params["embed"], batch, cfg)
+    new_caches = []
+    for i in range(period):
+        def body(x, pc, spec=specs[i]):
+            lp, cache = pc
+            y, nc = decode_layer_step(lp, tp, x, cache, pos, spec, cfg)
+            return y, nc
+
+        from repro.models import attention_core as AC
+        reps = jax.tree_util.tree_leaves(params["blocks"][i])[0].shape[0]
+        x, nc = jax.lax.scan(body, x, (params["blocks"][i], caches[i]),
+                             unroll=reps if AC._ANALYSIS["on"] else 1)
+        new_caches.append(nc)
+    x_ln, _ = units.prenorm_fwd(params["head"]["ln_f"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x_ln, params["head"]["w_lm"])[:, 0]
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, logits, new_caches
+
+
+def prefill_step(params, batch, cfg: ModelConfig,
+                 tp: TPContext = TPContext()):
+    """Inference prefill: full forward, last-position logits.  (KV-cache
+    materialization shares the forward's cost profile; the lowered artifact
+    omits the cache writes — noted in DESIGN.md §5.)"""
+    x = forward(params, batch, cfg, remat=False, tp=tp)
+    x_ln, _ = units.prenorm_fwd(params["head"]["ln_f"], x[:, -1:], cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x_ln, params["head"]["w_lm"])
+    return logits[:, 0]
+
+
+def attn_prefill(params, tp, x_ln, x_res, rope, spec, cfg):
+    """Forward with KV-cache extraction (inference prefill)."""
+    cos, sin = rope
+    b, s, _ = x_ln.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,df->bsf", x_ln, params["wq"])
+    k = jnp.einsum("bsd,df->bsf", x_ln, params["wk"])
+    v = jnp.einsum("bsd,df->bsf", x_ln, params["wv"])
+    nh_l, kv_l = q.shape[-1] // hd, k.shape[-1] // hd
+    qh = q.reshape(b, s, nh_l, hd).transpose(0, 2, 1, 3)
+    kh = k.reshape(b, s, kv_l, hd).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, s, kv_l, hd).transpose(0, 2, 1, 3)
+    if spec.qk_norm:
+        qh = ag.rmsnorm(params["qg"], qh)
+        kh = ag.rmsnorm(params["kg"], kh)
+    if cfg.use_rope:
+        qh = units.apply_rope(qh, cos, sin)
+        kh = units.apply_rope(kh, cos, sin)
+    o = flash_attention_inference(qh, kh, vh, cfg.causal, spec.window)
+    a = o.transpose(0, 2, 1, 3).reshape(b, s, nh_l * hd)
+    part = jnp.einsum("bsd,df->bsf", a, params["wo"])
+    y = tp.fuse_residual(part, x_res)
+    return y, {"k": kh, "v": vh}

@@ -1,0 +1,435 @@
+"""SSM / recurrent mixer units: Mamba (Jamba's 7-of-8 layers), mLSTM and
+sLSTM (xLSTM blocks).
+
+Unit decomposition mirrors the attention unit: the big in/out projections are
+split-B/W linears; the recurrent *core* (conv + selective scan / gated
+recurrence — parameter-light relative to the projections) takes joint B+W
+gradients via ``core_vjp`` (DESIGN.md §4 deviation note).
+
+The sequence scan is chunked with ``jax.checkpoint`` so the saved-residual
+memory of the backward pass is O(seq/chunk · state) instead of O(seq · state)
+— this is what lets jamba's 16k-wide mamba states lower at seq 4k–524k.
+
+Each core also exposes a single-step variant for autoregressive decode
+(``serve_step``), carrying an explicit recurrent state instead of a KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autograd as ag
+from repro.models.config import LayerSpec, ModelConfig
+from repro.tp.context import TPContext
+
+SCAN_CHUNK = 64
+
+
+def chunked_scan(step, init, xs, chunk: int = SCAN_CHUNK):
+    """lax.scan over time with per-chunk rematerialization.
+
+    xs leaves are (s, ...); full chunks scan under ``jax.checkpoint`` (the
+    backward stores only inter-chunk carries and recomputes inside each
+    chunk); the remainder runs as an exact un-chunked tail so the final
+    carry is the true step-s state (decode/prefill handoff relies on it)."""
+    s = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    n = s // chunk
+    tail = s - n * chunk
+    ys_parts = []
+    carry = init
+
+    if n:
+        head = jax.tree.map(
+            lambda a: a[: n * chunk].reshape((n, chunk) + a.shape[1:]), xs)
+
+        @jax.checkpoint
+        def chunk_fn(carry, xc):
+            return jax.lax.scan(step, carry, xc)
+
+        carry, ys_h = jax.lax.scan(chunk_fn, carry, head)
+        ys_parts.append(jax.tree.map(
+            lambda a: a.reshape((n * chunk,) + a.shape[2:]), ys_h))
+    if tail:
+        xt = jax.tree.map(lambda a: a[n * chunk:], xs)
+        carry, ys_t = jax.lax.scan(step, carry, xt)
+        ys_parts.append(ys_t)
+    if len(ys_parts) == 1:
+        return carry, ys_parts[0]
+    ys = jax.tree.map(lambda *p: jnp.concatenate(p, axis=0), *ys_parts)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM).
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ModelConfig, tp_size: int = 1):
+    di = cfg.ssm_expand * cfg.d_model // tp_size      # local inner dim
+    r = max(1, cfg.d_model // 16)                     # dt rank
+    return di, r, cfg.ssm_state, cfg.ssm_conv
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (b, s, di), w (di, ck)."""
+    ck = w.shape[-1]
+    out = jnp.zeros_like(x)
+    for j in range(ck):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[None, None, :, ck - 1 - j]
+    return out + b[None, None, :]
+
+
+def mamba_core_fn(cfg: ModelConfig, tp: TPContext):
+    def core(cp, x_, z):
+        b, s, _ = x_.shape
+        di = cp["A_log"].shape[0]
+        x_ = jax.nn.silu(_causal_conv(x_, cp["conv_w"], cp["conv_b"]))
+        # B/C/dt-rank projection contracts the (TP-sharded) inner dim ->
+        # partial sums; the All-Reduce here is tiny (r + 2n wide).
+        bcdt = tp.psum(jnp.einsum("bsd,dr->bsr", x_, cp["w_x"]))
+        r = cp["w_dt"].shape[0]
+        n = cp["A_log"].shape[1]
+        dt_r, B, C_ = bcdt[..., :r], bcdt[..., r:r + n], bcdt[..., r + n:]
+        dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_r, cp["w_dt"])
+                             + cp["dt_bias"][None, None])
+        A = -jnp.exp(cp["A_log"].astype(jnp.float32))  # (di, n)
+
+        def step(h, inp):
+            dt_t, x_t, B_t, C_t = inp                  # time-major slices
+            dA = jnp.exp(dt_t[..., None] * A[None])    # (b, di, n)
+            h = dA * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+            y_t = jnp.einsum("bdn,bn->bd", h, C_t)
+            return h, y_t
+
+        init = jnp.zeros((b, di, n), jnp.float32)
+        tm = lambda a: jnp.moveaxis(a, 1, 0)           # time-major
+        _, y = chunked_scan(step, init,
+                            (tm(dt.astype(jnp.float32)),
+                             tm(x_.astype(jnp.float32)),
+                             tm(B.astype(jnp.float32)),
+                             tm(C_.astype(jnp.float32))))
+        y = jnp.moveaxis(y, 0, 1) + cp["D"][None, None] * x_
+        return (y * jax.nn.silu(z)).astype(x_.dtype)
+
+    return core
+
+
+def mamba_fwd(params, tp: TPContext, x_ln, x_res, spec: LayerSpec,
+              cfg: ModelConfig):
+    x_, _ = ag.linear_fwd(x_ln, params["w_in_x"])
+    z, _ = ag.linear_fwd(x_ln, params["w_in_z"])
+    a, core_saved = ag.core_vjp(mamba_core_fn(cfg, tp), params["core"], x_, z)
+    part, _ = ag.linear_fwd(a, params["w_out"])
+    y = tp.fuse_residual(part, x_res)
+    return y, (x_ln, core_saved, a)
+
+
+def mamba_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
+                  cfg: ModelConfig):
+    x_ln, core_saved, a = ctx
+    g_res = gy
+    g_a = ag.linear_bwd_act(gy, params["w_out"])
+    core_pgrads, (g_x, g_z) = ag.core_bwd(mamba_core_fn(cfg, tp), core_saved,
+                                          g_a)
+    gx_ln = tp.psum(ag.linear_bwd_act(g_x, params["w_in_x"])
+                    + ag.linear_bwd_act(g_z, params["w_in_z"]))
+    wtape = {"w_in_x": ag.tape_entry(x_ln, g_x),
+             "w_in_z": ag.tape_entry(x_ln, g_z),
+             "w_out": ag.tape_entry(a, gy)}
+    return gx_ln, g_res, wtape, {"core": core_pgrads}
+
+
+def mamba_bwd_weight(wtape):
+    return {k: ag.tape_weight(e) for k, e in wtape.items()}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, tp_size: int = 1,
+                     dtype=jnp.float32):
+    di, r, n, ck = mamba_dims(cfg, tp_size)
+    return {"h": jnp.zeros((batch, di, n), jnp.float32),
+            "conv": jnp.zeros((batch, ck - 1, di), dtype)}
+
+
+def mamba_step(params, tp: TPContext, x_ln, x_res, state, cfg: ModelConfig):
+    """Single-token decode step. x_ln (b, 1, d)."""
+    cp = params["core"]
+    n = cp["A_log"].shape[1]
+    r = cp["w_dt"].shape[0]
+    x_ = jnp.einsum("bsd,df->bsf", x_ln, params["w_in_x"])[:, 0]
+    z = jnp.einsum("bsd,df->bsf", x_ln, params["w_in_z"])[:, 0]
+    window = jnp.concatenate([state["conv"], x_[:, None, :]], axis=1)
+    # taps aligned with _causal_conv: out_t = sum_j x_{t-j} * w[:, ck-1-j]
+    ck = cp["conv_w"].shape[-1]
+    conv = sum(window[:, ck - 1 - j, :] * cp["conv_w"][:, ck - 1 - j]
+               for j in range(ck))
+    x_c = jax.nn.silu(conv + cp["conv_b"])
+    bcdt = tp.psum(jnp.einsum("bd,dr->br", x_c, cp["w_x"]))
+    dt_r, B, C_ = bcdt[..., :r], bcdt[..., r:r + n], bcdt[..., r + n:]
+    dt = jax.nn.softplus(jnp.einsum("br,rd->bd", dt_r, cp["w_dt"])
+                         + cp["dt_bias"][None])
+    A = -jnp.exp(cp["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A[None])
+    h = dA * state["h"] + (dt * x_c)[..., None].astype(jnp.float32) \
+        * B[:, None, :].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, C_.astype(jnp.float32)) \
+        + cp["D"][None] * x_c
+    a = (y * jax.nn.silu(z)).astype(x_ln.dtype)[:, None, :]
+    part = jnp.einsum("bsd,df->bsf", a, params["w_out"])
+    y_out = tp.fuse_residual(part, x_res)
+    new_state = {"h": h, "conv": window[:, 1:]}
+    return y_out, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM, xLSTM).
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg: ModelConfig, tp_size: int = 1):
+    du = 2 * cfg.d_model // tp_size                   # local up dim (expand 2)
+    nh = max(1, cfg.n_heads // tp_size)
+    return du, nh, du // nh
+
+
+def _mlstm_step(carry, inp):
+    C, n, m = carry                                    # (b,h,dv,dk) (b,h,dk) (b,h)
+    q, k, v, it, ft = inp
+    m_new = jnp.maximum(ft + m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + m - m_new)
+    C = f[..., None, None] * C + i[..., None, None] \
+        * (v[..., :, None] * k[..., None, :])
+    n = f[..., None] * n + i[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_core_fn(nh: int, hd: int):
+    def core(_, q, k, v, it, ft):
+        b, s, _ = q.shape
+        sh = lambda a: jnp.moveaxis(
+            a.reshape(b, s, nh, -1).astype(jnp.float32), 1, 0)
+        qh, kh, vh = sh(q), sh(k) * hd ** -0.5, sh(v)
+        itm = jnp.moveaxis(it.astype(jnp.float32), 1, 0)
+        ftm = jax.nn.log_sigmoid(jnp.moveaxis(ft.astype(jnp.float32), 1, 0))
+        init = (jnp.zeros((b, nh, hd, hd), jnp.float32),
+                jnp.zeros((b, nh, hd), jnp.float32),
+                jnp.full((b, nh), -1e30, jnp.float32))
+        _, h = chunked_scan(_mlstm_step, init, (qh, kh, vh, itm, ftm))
+        return jnp.moveaxis(h, 0, 1).reshape(b, s, nh * hd).astype(q.dtype)
+
+    return core
+
+
+def _mlstm_gated_core(nh: int, hd: int):
+    core = mlstm_core_fn(nh, hd)
+
+    def gated_core(_, q_, k_, v_, it_, ft_, z_):
+        b, s = q_.shape[:2]
+        flat = lambda a: a.reshape(b, s, nh * hd)
+        h = core(None, flat(q_), flat(k_), flat(v_), it_, ft_)
+        return h * jax.nn.silu(z_)
+
+    return gated_core
+
+
+def mlstm_fwd(params, tp: TPContext, x_ln, x_res, spec: LayerSpec,
+              cfg: ModelConfig):
+    # Up projections (column-parallel, heads shard the up dim).
+    xu, _ = ag.linear_fwd(x_ln, params["w_upx"])      # (b, s, du_l)
+    z, _ = ag.linear_fwd(x_ln, params["w_upz"])
+    nh, hd = params["wq"].shape[0], params["wq"].shape[1]
+    b, s, du = xu.shape
+    xh = xu.reshape(b, s, nh, hd)
+    # Head-local (block-diagonal) q/k/v and per-head scalar gates — the
+    # TP-shardable analogue of xLSTM's projections (heads shard over TP).
+    q, _ = ag.head_linear_fwd(xh, params["wq"])
+    k, _ = ag.head_linear_fwd(xh, params["wk"])
+    v, _ = ag.head_linear_fwd(xh, params["wv"])
+    it = jnp.einsum("bshd,hd->bsh", xh, params["wi"])
+    ft = jnp.einsum("bshd,hd->bsh", xh, params["wf"])
+    a, core_saved = ag.core_vjp(_mlstm_gated_core(nh, hd), None,
+                                q, k, v, it, ft, z)
+    part, _ = ag.linear_fwd(a, params["w_down"])
+    y = tp.fuse_residual(part, x_res)
+    return y, (x_ln, xh, core_saved, a)
+
+
+def mlstm_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
+                  cfg: ModelConfig):
+    x_ln, xh, core_saved, a = ctx
+    g_res = gy
+    g_a = ag.linear_bwd_act(gy, params["w_down"])
+    nh, hd = params["wq"].shape[0], params["wq"].shape[1]
+    _, (gq, gk, gv, git, gft, gz) = ag.core_bwd(
+        _mlstm_gated_core(nh, hd), core_saved, g_a)
+    g_xh = (ag.head_linear_bwd_act(gq, params["wq"])
+            + ag.head_linear_bwd_act(gk, params["wk"])
+            + ag.head_linear_bwd_act(gv, params["wv"])
+            + jnp.einsum("bsh,hd->bshd", git, params["wi"])
+            + jnp.einsum("bsh,hd->bshd", gft, params["wf"]))
+    b, s = g_xh.shape[:2]
+    g_xu = g_xh.reshape(b, s, nh * hd)
+    gx_ln = tp.psum(ag.linear_bwd_act(g_xu, params["w_upx"])
+                    + ag.linear_bwd_act(gz, params["w_upz"]))
+    wtape = {"w_upx": ag.tape_entry(x_ln, g_xu),
+             "w_upz": ag.tape_entry(x_ln, gz),
+             "wq": ag.tape_entry(xh, gq), "wk": ag.tape_entry(xh, gk),
+             "wv": ag.tape_entry(xh, gv),
+             "wi": ag.tape_entry(xh, git), "wf": ag.tape_entry(xh, gft),
+             "w_down": ag.tape_entry(a, gy)}
+    return gx_ln, g_res, wtape, {}
+
+
+_MLSTM_HEAD_TAPES = {"wq", "wk", "wv"}
+_MLSTM_GATE_TAPES = {"wi", "wf"}
+
+
+def mlstm_bwd_weight(wtape):
+    out = {}
+    for k, (x, g) in wtape.items():
+        if k in _MLSTM_HEAD_TAPES:
+            out[k] = ag.head_linear_bwd_weight(x, g)
+        elif k in _MLSTM_GATE_TAPES:
+            out[k] = jnp.einsum("bshd,bsh->hd", x, g,
+                                preferred_element_type=jnp.float32
+                                ).astype(g.dtype)
+        else:
+            out[k] = ag.linear_bwd_weight(x, g)
+    return out
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, tp_size: int = 1):
+    du, nh, hd = mlstm_dims(cfg, tp_size)
+    return {"C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, nh, hd), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def mlstm_step(params, tp: TPContext, x_ln, x_res, state, cfg: ModelConfig):
+    xu = jnp.einsum("bsd,df->bsf", x_ln, params["w_upx"])[:, 0]
+    z = jnp.einsum("bsd,df->bsf", x_ln, params["w_upz"])[:, 0]
+    nh, hd = params["wq"].shape[0], params["wq"].shape[1]
+    b = xu.shape[0]
+    du = nh * hd
+    xh = xu.reshape(b, nh, hd)
+    q = jnp.einsum("bhd,hde->bhe", xh, params["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bhd,hde->bhe", xh, params["wk"]).astype(jnp.float32) \
+        * hd ** -0.5
+    v = jnp.einsum("bhd,hde->bhe", xh, params["wv"]).astype(jnp.float32)
+    it = jnp.einsum("bhd,hd->bh", xh, params["wi"]).astype(jnp.float32)
+    ft = jax.nn.log_sigmoid(
+        jnp.einsum("bhd,hd->bh", xh, params["wf"]).astype(jnp.float32))
+    (C, n, m), h = _mlstm_step((state["C"], state["n"], state["m"]),
+                               (q, k, v, it, ft))
+    a = (h.reshape(b, du) * jax.nn.silu(z)).astype(x_ln.dtype)[:, None]
+    part = jnp.einsum("bsd,df->bsf", a, params["w_down"])
+    y = tp.fuse_residual(part, x_res)
+    return y, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with block-diagonal recurrence, xLSTM).
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg: ModelConfig, tp_size: int = 1):
+    du = cfg.d_model // tp_size
+    nh = max(1, cfg.n_heads // tp_size)
+    return du, nh, du // nh
+
+
+def slstm_core_fn(nh: int, hd: int):
+    def core(cp, xw):
+        # xw (b, s, 4*du): pre-activations from the input projection.
+        b, s, d4 = xw.shape
+        du = d4 // 4
+        R = cp["r"]                                    # (4, nh, hd, hd)
+
+        def step(carry, xw_t):
+            c, n, h, m = carry                         # (b, du) each
+            hh = h.reshape(b, nh, hd)
+            rec = jnp.einsum("bhd,ghde->gbhe", hh, R).reshape(4, b, du)
+            zt = jnp.tanh(xw_t[..., :du] + rec[0])
+            it = xw_t[..., du:2 * du] + rec[1]
+            ft = xw_t[..., 2 * du:3 * du] + rec[2]
+            ot = jax.nn.sigmoid(xw_t[..., 3 * du:] + rec[3])
+            m_new = jnp.maximum(ft + m, it)
+            i = jnp.exp(it - m_new)
+            f = jnp.exp(ft + m - m_new)
+            c = f * c + i * zt
+            n = f * n + i
+            h = ot * c / jnp.maximum(n, 1.0)
+            return (c, n, h, m_new), h
+
+        z = jnp.zeros((b, du), jnp.float32)
+        init = (z, z, z, jnp.full((b, du), -1e30, jnp.float32))
+        _, hs = chunked_scan(step, init,
+                             jnp.moveaxis(xw.astype(jnp.float32), 1, 0))
+        return jnp.moveaxis(hs, 0, 1).astype(xw.dtype)
+
+    return core
+
+
+def slstm_fwd(params, tp: TPContext, x_ln, x_res, spec: LayerSpec,
+              cfg: ModelConfig):
+    xw, _ = ag.linear_fwd(x_ln, params["w_x"])        # (b, s, 4*du_l)
+    du = xw.shape[-1] // 4
+    nh = params["core"]["r"].shape[1]
+    core = slstm_core_fn(nh, du // nh)
+    a, core_saved = ag.core_vjp(core, params["core"], xw)
+    part, _ = ag.linear_fwd(a, params["w_down"])
+    y = tp.fuse_residual(part, x_res)
+    return y, (x_ln, core_saved, a)
+
+
+def slstm_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
+                  cfg: ModelConfig):
+    x_ln, core_saved, a = ctx
+    g_res = gy
+    g_a = ag.linear_bwd_act(gy, params["w_down"])
+    du = a.shape[-1]
+    nh = params["core"]["r"].shape[1]
+    core = slstm_core_fn(nh, du // nh)
+    core_pgrads, (g_xw,) = ag.core_bwd(core, core_saved, g_a)
+    gx_ln = tp.psum(ag.linear_bwd_act(g_xw, params["w_x"]))
+    wtape = {"w_x": ag.tape_entry(x_ln, g_xw), "w_down": ag.tape_entry(a, gy)}
+    return gx_ln, g_res, wtape, {"core": core_pgrads}
+
+
+def slstm_bwd_weight(wtape):
+    return {k: ag.tape_weight(e) for k, e in wtape.items()}
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, tp_size: int = 1):
+    du, nh, hd = slstm_dims(cfg, tp_size)
+    z = jnp.zeros((batch, du), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, du), -1e30,
+                                                  jnp.float32)}
+
+
+def slstm_step(params, tp: TPContext, x_ln, x_res, state, cfg: ModelConfig):
+    xw = jnp.einsum("bsd,df->bsf", x_ln, params["w_x"])[:, 0]
+    du = xw.shape[-1] // 4
+    nh = params["core"]["r"].shape[1]
+    hd = du // nh
+    b = xw.shape[0]
+    R = params["core"]["r"]
+    c, n, h, m = (state["c"], state["n"], state["h"], state["m"])
+    hh = h.reshape(b, nh, hd)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh, R).reshape(4, b, du)
+    xf = xw.astype(jnp.float32)
+    zt = jnp.tanh(xf[..., :du] + rec[0])
+    it = xf[..., du:2 * du] + rec[1]
+    ft = xf[..., 2 * du:3 * du] + rec[2]
+    ot = jax.nn.sigmoid(xf[..., 3 * du:] + rec[3])
+    m_new = jnp.maximum(ft + m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + m - m_new)
+    c = f * c + i * zt
+    n = f * n + i
+    h = ot * c / jnp.maximum(n, 1.0)
+    a = h.astype(x_ln.dtype)[:, None]
+    part = jnp.einsum("bsd,df->bsf", a, params["w_down"])
+    y = tp.fuse_residual(part, x_res)
+    return y, {"c": c, "n": n, "h": h, "m": m_new}

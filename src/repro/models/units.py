@@ -1,0 +1,382 @@
+"""Fine-grained computation units (paper §3).
+
+Each Transformer layer decomposes into **Pre-Attn**, **Attn**, **Pre-MLP**,
+**MLP** units (SSM/hybrid archs swap the mixer unit; MoE swaps the MLP unit).
+Every unit exposes
+
+  ``*_fwd(params, tp, ...) -> (out, ctx)``
+  ``*_bwd_act(params, tp, ctx, gy) -> (input grads..., wtape, joint_grads)``
+  ``*_bwd_weight(wtape) -> deferred weight grads``
+
+matching the paper's F / B / W decomposition: B propagates activation
+gradients (and computes the <1%-FLOPs "core" parameter grads jointly, as
+production Zero-Bubble implementations do), W holds the big ``dW = x^T g``
+GEMMs on a *weight tape* for deferred execution.  All collectives are placed
+per Fig. 2: the unit-output All-Reduce (``g`` operator, with Eq. (1) residual
+fusion) in forward, the post-projection-input All-Reduce (``f`` operator) in
+backward.  W computations are collective-free — which is exactly why the
+schedule can use them to fill pipeline bubbles.
+
+Everything is a pure function of pytrees — jittable and carryable through
+``lax.scan`` / ``lax.switch`` in the pipeline executor.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autograd as ag
+from repro.models.attention_core import flash_attention
+from repro.models.config import LayerSpec, ModelConfig
+from repro.tp.context import TPContext
+
+
+# ---------------------------------------------------------------------------
+# RoPE tables
+# ---------------------------------------------------------------------------
+
+def rope_tables(max_seq: int, hd: int, theta: float):
+    inv = 1.0 / theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    t = jnp.arange(max_seq, dtype=jnp.float32)
+    ang = jnp.outer(t, inv)                       # (S, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_at(pos, hd: int, theta: float):
+    """RoPE table row for a (possibly traced) scalar position: (1, hd/2)."""
+    inv = 1.0 / theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = jnp.asarray(pos, jnp.float32)[None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (b, h, s, hd); cos/sin (s, hd/2). NeoX-style half rotation.
+    fp32 rotation, result cast back to x.dtype (keeps bf16 scan carries)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pre-norm units (Pre-Attn / Pre-MLP).
+# ---------------------------------------------------------------------------
+
+def _norm_core(cfg: ModelConfig):
+    if cfg.norm == "rmsnorm":
+        return lambda p, x: ag.rmsnorm(p["g"], x)
+    return lambda p, x: ag.layernorm((p["g"], p["b"]), x)
+
+
+def prenorm_fwd(params, x, cfg: ModelConfig):
+    core = _norm_core(cfg)
+    y, saved = ag.core_vjp(core, params, x)
+    return y, saved
+
+
+def prenorm_bwd(ctx, g_ln, cfg: ModelConfig):
+    core = _norm_core(cfg)
+    pgrads, (gx,) = ag.core_bwd(core, ctx, g_ln)
+    return gx, pgrads
+
+
+# ---------------------------------------------------------------------------
+# Attention unit.
+# ---------------------------------------------------------------------------
+
+def _attn_core_fn(spec: LayerSpec, cfg: ModelConfig, n_heads_local: int,
+                  kv_heads_local: int, q_offset: int = 0):
+    hd = cfg.hd
+
+    def core(core_params, q, k, v, cos, sin):
+        b, s, _ = q.shape
+        qh = q.reshape(b, s, n_heads_local, hd).transpose(0, 2, 1, 3)
+        kh = k.reshape(b, s, kv_heads_local, hd).transpose(0, 2, 1, 3)
+        vh = v.reshape(b, s, kv_heads_local, hd).transpose(0, 2, 1, 3)
+        if spec.qk_norm:
+            qh = ag.rmsnorm(core_params["qg"], qh)
+            kh = ag.rmsnorm(core_params["kg"], kh)
+        if cfg.use_rope:
+            qh = apply_rope(qh, cos, sin)
+            kh = apply_rope(kh, cos, sin)
+        o = flash_attention(qh, kh, vh, cfg.causal, spec.window, None, q_offset)
+        return o.transpose(0, 2, 1, 3).reshape(b, s, n_heads_local * hd)
+
+    return core
+
+
+def attn_fwd(params, tp: TPContext, x_ln, x_res, rope, spec: LayerSpec,
+             cfg: ModelConfig):
+    cos, sin = rope
+    q, _ = ag.linear_fwd(x_ln, params["wq"])
+    k, _ = ag.linear_fwd(x_ln, params["wk"])
+    v, _ = ag.linear_fwd(x_ln, params["wv"])
+    nh_l = q.shape[-1] // cfg.hd
+    kv_l = k.shape[-1] // cfg.hd
+    core = _attn_core_fn(spec, cfg, nh_l, kv_l)
+    core_params = {k_: params[k_] for k_ in ("qg", "kg") if k_ in params}
+    a, core_saved = ag.core_vjp(core, core_params, q, k, v, cos, sin)
+    o_part, _ = ag.linear_fwd(a, params["wo"])
+    y = tp.fuse_residual(o_part, x_res)
+    return y, (x_ln, core_saved, a)
+
+
+def attn_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
+                 cfg: ModelConfig):
+    x_ln, core_saved, a = ctx
+    nh_l = params["wq"].shape[-1] // cfg.hd
+    kv_l = params["wk"].shape[-1] // cfg.hd
+    core = _attn_core_fn(spec, cfg, nh_l, kv_l)
+    g_res = gy                                     # Eq. (2) "+1" term
+    g_a = ag.linear_bwd_act(gy, params["wo"])
+    core_pgrads, (gq, gk, gv, _, _) = ag.core_bwd(core, core_saved, g_a)
+    gx_ln = tp.psum(ag.linear_bwd_act(gq, params["wq"])
+                    + ag.linear_bwd_act(gk, params["wk"])
+                    + ag.linear_bwd_act(gv, params["wv"]))
+    joint = {k_: tp.psum(v_) for k_, v_ in core_pgrads.items()}
+    wtape = {"wq": ag.tape_entry(x_ln, gq), "wk": ag.tape_entry(x_ln, gk),
+             "wv": ag.tape_entry(x_ln, gv), "wo": ag.tape_entry(a, gy)}
+    return gx_ln, g_res, wtape, joint
+
+
+def attn_bwd_weight(wtape):
+    return {k: ag.tape_weight(e) for k, e in wtape.items()}
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP units (gated / plain).
+# ---------------------------------------------------------------------------
+
+def _act_fn(name: str):
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu, "relu": jax.nn.relu}[name]
+
+
+def mlp_fwd(params, tp: TPContext, x_ln, x_res, spec: LayerSpec,
+            cfg: ModelConfig):
+    if spec.mlp == "gated":
+        hg, _ = ag.linear_fwd(x_ln, params["wg"])
+        hu, _ = ag.linear_fwd(x_ln, params["wu"])
+        act = _act_fn(cfg.gated_act)
+        core = lambda _, g_, u_: act(g_) * u_
+        a, core_saved = ag.core_vjp(core, None, hg, hu)
+        part, _ = ag.linear_fwd(a, params["wd"])
+        y = tp.fuse_residual(part, x_res)
+        return y, (x_ln, core_saved, a)
+    else:  # plain
+        h1, _ = ag.linear_fwd(x_ln, params["w1"])
+        act = _act_fn(cfg.plain_act)
+        core = lambda _, h_: act(h_)
+        a, core_saved = ag.core_vjp(core, None, h1)
+        part, _ = ag.linear_fwd(a, params["w2"])
+        y = tp.fuse_residual(part, x_res)
+        return y, (x_ln, core_saved, a)
+
+
+def mlp_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
+                cfg: ModelConfig):
+    x_ln, core_saved, a = ctx
+    g_res = gy
+    if spec.mlp == "gated":
+        g_a = ag.linear_bwd_act(gy, params["wd"])
+        act = _act_fn(cfg.gated_act)
+        core = lambda _, g_, u_: act(g_) * u_
+        _, (g_hg, g_hu) = ag.core_bwd(core, core_saved, g_a)
+        gx_ln = tp.psum(ag.linear_bwd_act(g_hg, params["wg"])
+                        + ag.linear_bwd_act(g_hu, params["wu"]))
+        wtape = {"wg": ag.tape_entry(x_ln, g_hg), "wu": ag.tape_entry(x_ln, g_hu),
+                 "wd": ag.tape_entry(a, gy)}
+    else:
+        g_a = ag.linear_bwd_act(gy, params["w2"])
+        act = _act_fn(cfg.plain_act)
+        core = lambda _, h_: act(h_)
+        _, (g_h1,) = ag.core_bwd(core, core_saved, g_a)
+        gx_ln = tp.psum(ag.linear_bwd_act(g_h1, params["w1"]))
+        wtape = {"w1": ag.tape_entry(x_ln, g_h1), "w2": ag.tape_entry(a, gy)}
+    return gx_ln, g_res, wtape, {}
+
+
+def mlp_bwd_weight(wtape):
+    return {k: ag.tape_weight(e) for k, e in wtape.items()}
+
+
+# ---------------------------------------------------------------------------
+# MoE MLP unit (capacity-dispatch, GShard/Megatron style; experts TP-sharded
+# on their hidden dim like a dense MLP — router & dispatch replicated in the
+# TP group, token dim sharded only across data parallel).
+# ---------------------------------------------------------------------------
+
+# Expert-parallel hint (§Perf): with experts sharded over `model`, GSPMD
+# resolves the capacity-dispatch scatter by all-gathering the full
+# (b, E, C, d) buffer unless the target sharding is pinned here.  Set by
+# the launch layer; None (default) for single-device tests.
+_MOE_SHARD = {"axes": None}     # (batch_axes, expert_axis)
+
+
+def _constrain_moe(x, edim: int):
+    axes = _MOE_SHARD["axes"]
+    if axes is None:
+        return x
+    batch_axes, expert_axis = axes
+    spec = [None] * x.ndim
+    spec[0] = batch_axes
+    spec[edim] = expert_axis
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*spec))
+
+
+def moe_capacity(s_tokens: int, moe) -> int:
+    return max(1, int(-(-moe.top_k * s_tokens * moe.capacity_factor
+                        // moe.num_experts)))
+
+
+def _route(logits, top_k: int, capacity: int):
+    """Static (non-differentiable) routing decisions.
+
+    logits (b, s, E) -> idx (b, s, k) int32, pos (b, s, k) int32 position in
+    the expert's capacity buffer, keep (b, s, k) f32 in {0,1}."""
+    b, s, E = logits.shape
+    _, idx = jax.lax.top_k(logits, top_k)                   # (b, s, k)
+    flat = idx.reshape(b, s * top_k)
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)       # (b, s*k, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - 1                # position per slot
+    pos = jnp.take_along_axis(pos_all, flat[..., None], axis=-1)[..., 0]
+    pos = pos.reshape(b, s, top_k)
+    keep = (pos < capacity).astype(jnp.float32)
+    pos = jnp.minimum(pos, capacity - 1)
+    return idx, pos, keep
+
+
+def _gates_core(logits, idx):
+    """Differentiable part of routing: softmax over the selected top-k."""
+    sel = jnp.take_along_axis(logits, idx, axis=-1)         # (b, s, k)
+    return jax.nn.softmax(sel.astype(jnp.float32), axis=-1).astype(logits.dtype)
+
+
+def _dispatch(x, idx, pos, keep, E, C):
+    """x (b, s, d) -> expert_in (b, E, C, d) via scatter-add."""
+    b, s, d = x.shape
+    k = idx.shape[-1]
+    flat = (idx * C + pos).reshape(b, s * k)
+    upd = (x[:, :, None, :] * keep[..., None].astype(x.dtype)) \
+        .reshape(b, s * k, d).astype(x.dtype)
+
+    def one(fl, up):
+        return jnp.zeros((E * C, d), x.dtype).at[fl].add(up)
+
+    out = jax.vmap(one)(flat, upd)
+    return out.reshape(b, E, C, d)
+
+
+def _gather_combine(expert_out, idx, pos, keep, gates):
+    """expert_out (b, E, C, d) -> (b, s, d) weighted combine."""
+    b, E, C, d = expert_out.shape
+    s, k = idx.shape[1], idx.shape[2]
+    flat = (idx * C + pos).reshape(b, s * k)
+    eo = expert_out.reshape(b, E * C, d)
+    picked = jax.vmap(lambda e_, f_: e_[f_])(eo, flat).reshape(b, s, k, d)
+    w = (gates * keep.astype(gates.dtype)).astype(expert_out.dtype)
+    return jnp.einsum("bskd,bsk->bsd", picked, w), picked
+
+
+def moe_fwd(params, tp: TPContext, x_ln, x_res, spec: LayerSpec,
+            cfg: ModelConfig):
+    moe = cfg.moe
+    b, s, d = x_ln.shape
+    C = moe_capacity(s, moe)
+    logits, _ = ag.linear_fwd(x_ln, params["router"])
+    idx, pos, keep = _route(jax.lax.stop_gradient(logits), moe.top_k, C)
+    gates, gates_saved = ag.core_vjp(lambda _, lg: _gates_core(lg, idx),
+                                     None, logits)
+    expert_in = _constrain_moe(
+        _dispatch(x_ln, idx, pos, keep, moe.num_experts, C), 1)
+    ein = expert_in
+    if moe.gated:
+        hg = jnp.einsum("becd,edf->becf", ein, params["wg"])
+        hu = jnp.einsum("becd,edf->becf", ein, params["wu"])
+        core = lambda _, g_, u_: jax.nn.silu(g_) * u_
+        a, core_saved = ag.core_vjp(core, None, hg, hu)
+    else:
+        h1 = jnp.einsum("becd,edf->becf", ein, params["wg"])
+        core = lambda _, h_: jax.nn.gelu(h_)
+        a, core_saved = ag.core_vjp(core, None, h1)
+    part = jnp.einsum("becf,efd->becd", a, params["wd"])
+    expert_out = _constrain_moe(tp.psum(part), 1)
+    y_moe, picked = _gather_combine(expert_out, idx, pos, keep, gates)
+    y = y_moe + x_res
+    ctx = (x_ln, gates_saved, (idx, pos, keep, gates), expert_in, core_saved,
+           a, expert_out)
+    return y, ctx
+
+
+def moe_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
+                cfg: ModelConfig):
+    moe = cfg.moe
+    x_ln, gates_saved, (idx, pos, keep, gates), expert_in, core_saved, a, \
+        expert_out = ctx
+    b, s, d = x_ln.shape
+    E = moe.num_experts
+    C = expert_out.shape[2]
+    g_res = gy
+    # combine bwd
+    _, picked = _gather_combine(expert_out, idx, pos, keep, gates)
+    g_gates = jnp.einsum("bsd,bskd->bsk", gy, picked) * keep
+    g_picked = gy[:, :, None, :] * (gates * keep)[..., None]      # (b,s,k,d)
+    g_expert_out = _dispatch(g_picked.reshape(b, s * idx.shape[-1], d)
+                             .reshape(b, -1, d),
+                             idx.reshape(b, -1, 1), pos.reshape(b, -1, 1),
+                             jnp.ones_like(keep).reshape(b, -1, 1), E, C)
+    g_expert_out = g_expert_out.reshape(b, E, C, d)
+    # expert MLP bwd
+    if moe.gated:
+        g_a = jnp.einsum("becd,efd->becf", g_expert_out, params["wd"])
+        core = lambda _, g_, u_: jax.nn.silu(g_) * u_
+        _, (g_hg, g_hu) = ag.core_bwd(core, core_saved, g_a)
+        g_ein = tp.psum(jnp.einsum("becf,edf->becd", g_hg, params["wg"])
+                        + jnp.einsum("becf,edf->becd", g_hu, params["wu"]))
+        wtape = {"wg": (expert_in, g_hg), "wu": (expert_in, g_hu),
+                 "wd": (a, g_expert_out)}
+    else:
+        g_a = jnp.einsum("becd,efd->becf", g_expert_out, params["wd"])
+        core = lambda _, h_: jax.nn.gelu(h_)
+        _, (g_h1,) = ag.core_bwd(core, core_saved, g_a)
+        g_ein = tp.psum(jnp.einsum("becf,edf->becd", g_h1, params["wg"]))
+        wtape = {"wg": (expert_in, g_h1), "wd": (a, g_expert_out)}
+    # dispatch bwd: gather g_ein back to tokens
+    k = idx.shape[-1]
+    flat = (idx * C + pos).reshape(b, s * k)
+    gtok = jax.vmap(lambda e_, f_: e_[f_])(g_ein.reshape(b, E * C, d), flat)
+    gx_dispatch = jnp.einsum("bskd,bsk->bsd",
+                             gtok.reshape(b, s, k, d), keep)
+    # router bwd
+    _, (g_logits,) = ag.core_bwd(lambda _, lg: _gates_core(lg, idx),
+                                 gates_saved, g_gates)
+    gx_router = ag.linear_bwd_act(g_logits, params["router"])
+    gx_ln = gx_dispatch + gx_router
+    wtape["router"] = ag.tape_entry(x_ln, g_logits)
+    return gx_ln, g_res, wtape, {}
+
+
+def moe_bwd_weight(wtape):
+    out = {}
+    for name, (x, g) in wtape.items():
+        if name == "router":
+            out[name] = ag.linear_bwd_weight(x, g)
+        else:
+            # (b, E, C, *) tapes: contract batch+capacity per expert
+            out[name] = jnp.einsum(
+                "becd,becf->edf", x, g,
+                preferred_element_type=jnp.float32).astype(g.dtype)
+    return out
+
+
+def moe_aux_loss(logits, idx, moe) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary loss (used by pjit-mode training)."""
+    E = moe.num_experts
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(idx, E).sum(axis=2).mean(axis=(0, 1))
+    return moe.aux_loss_coef * E * jnp.sum(me * ce)

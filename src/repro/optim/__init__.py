@@ -1,0 +1,2 @@
+from repro.optim.adamw import (OptConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, lr_at)

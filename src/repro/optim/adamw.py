@@ -1,0 +1,88 @@
+"""AdamW with global-norm clipping and warmup+cosine/linear LR schedules.
+
+Pure-pytree implementation (no optax dependency): states shard exactly like
+their parameters under pjit, which the dry-run relies on for the ZeRO-style
+``data``-axis optimizer sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: Literal["cosine", "linear", "const"] = "cosine"
+    min_lr_frac: float = 0.1
+
+
+def lr_at(oc: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(oc.warmup_steps, 1))
+    t = jnp.clip((step - oc.warmup_steps)
+                 / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    if oc.schedule == "cosine":
+        decay = oc.min_lr_frac + (1 - oc.min_lr_frac) \
+            * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif oc.schedule == "linear":
+        decay = oc.min_lr_frac + (1 - oc.min_lr_frac) * (1 - t)
+    else:
+        decay = 1.0
+    return oc.lr * warm * decay
+
+
+def adamw_init(params):
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x), p)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def _is_matrix(x):
+    return x.ndim >= 2
+
+
+def adamw_update(params, grads, state, oc: OptConfig):
+    grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+    step = state["step"] + 1
+    b1, b2 = oc.betas
+    lr = lr_at(oc, state["step"])
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / c1
+        nhat = nu / c2
+        delta = mhat / (jnp.sqrt(nhat) + oc.eps)
+        if _is_matrix(p):
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        return (p - lr * delta).astype(p.dtype), mu, nu
+
+    p_flat, treedef = jax.tree.flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    mu_flat = treedef.flatten_up_to(state["mu"])
+    nu_flat = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, mu, nu)
+           for p, g, mu, nu in zip(p_flat, g_flat, mu_flat, nu_flat)]
+    unflat = lambda i: jax.tree.unflatten(treedef, [o[i] for o in out])
+    return unflat(0), {"mu": unflat(1), "nu": unflat(2), "step": step}, gnorm

@@ -1,0 +1,10 @@
+"""Pipeline-parallel runtime: schedule-table executors.
+
+* ``reference`` — single-process executor that replays any schedule table
+  with the real per-unit F/B/W math (any architecture, braiding semantics,
+  V-shape routing).  Numerics oracle: grads must equal ``jax.grad``.
+* ``spmd`` — shard_map executor over a real ``stage`` mesh axis with
+  ``ppermute`` stage communication; one scanned SPMD program executes the
+  per-device instruction streams in lockstep slots.
+"""
+from repro.pipeline.reference import pipeline_grads, reference_grads

@@ -1,0 +1,216 @@
+"""Schedule-table reference executor (single process).
+
+Replays a schedule produced by ``repro.core.schedule`` with the *real*
+fine-grained unit math of ``repro.models.model``: every F / B / W component
+(braided or not) runs in exactly the table's device order, with activations,
+forward contexts and weight tapes held in per-(vs, mb) buffers and the
+"V"-shape dataflow routed between virtual stages.
+
+This is the numerics oracle for the paper's braided F/B/W decomposition:
+``pipeline_grads(...)`` must equal ``jax.grad`` of the monolithic loss for
+*any* schedule kind and any architecture.  The SPMD executor is validated
+against it in turn.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.simulator import Instr, Placement
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.tp.context import TPContext
+
+
+def split_chunks(cfg: ModelConfig, n_vs: int):
+    """Layer index ranges per virtual stage (contiguous, near-uniform; the
+    remainder goes to the earliest stages, mirroring the paper's 'last stage
+    has two fewer layers' guidance for the vocab-heavy loss stage)."""
+    n = cfg.n_layers
+    base, rem = divmod(n, n_vs)
+    sizes = [base + (1 if i < rem else 0) for i in range(n_vs)]
+    bounds = []
+    start = 0
+    for s in sizes:
+        bounds.append((start, start + s))
+        start += s
+    return bounds
+
+
+def _merge_grads(acc, new, scale=1.0):
+    """Deep union-merge of (possibly partial) nested grad dicts: the joint
+    grads (norm gains, core params) and the deferred weight-tape grads cover
+    complementary sub-trees of each layer's parameter dict."""
+    if isinstance(new, dict):
+        acc = {} if acc is None else dict(acc)
+        for k, v in new.items():
+            acc[k] = _merge_grads(acc.get(k), v, scale)
+        return acc
+    if acc is None:
+        return jax.tree.map(lambda x: x * scale, new)
+    return jax.tree.map(lambda a, b: a + b * scale, acc, new)
+
+
+def pipeline_grads(params, batches, tables, pl: Placement, cfg: ModelConfig,
+                   tp: TPContext = TPContext()):
+    """Execute a schedule table over ``m`` microbatches.
+
+    params: canonical init_params output (unstacked blocks).
+    batches: list of m microbatch dicts ({"tokens"/"embeds", "labels"}).
+    Returns (mean loss, grads pytree like params).
+    """
+    m = len(batches)
+    n_vs = pl.n_vs
+    bounds = split_chunks(cfg, n_vs)
+    vs_params = [params["blocks"][a:b] for a, b in bounds]
+    vs_specs = [cfg.layers[a:b] for a, b in bounds]
+    scale = 1.0 / m
+
+    x_in: dict = {}          # (vs, mb) -> activation
+    g_in: dict = {}          # (vs, mb) -> upstream grad
+    ctxs: dict = {}          # (vs, mb) -> fwd contexts
+    embed_ctx: dict = {}     # mb -> embed ctx
+    head_ctx: dict = {}      # mb -> head ctx
+    tapes: dict = {}         # (vs, mb) -> weight tape
+    head_tape: dict = {}
+    losses = [None] * m
+    g_blocks = [None] * cfg.n_layers
+    g_embed = None
+    g_head_lm = None
+    g_head_joint = None
+
+    rope_cache: dict = {}
+
+    def rope_for(seq):
+        if seq not in rope_cache:
+            rope_cache[seq] = M._rope_for(cfg, seq)
+        return rope_cache[seq]
+
+    def run_f(vs, mb):
+        if vs == 0:
+            x, ec = M.embed_fwd(params["embed"], batches[mb], cfg)
+            embed_ctx[mb] = ec
+        else:
+            x = x_in.pop((vs, mb))
+        rope = rope_for(x.shape[1])
+        y, cs = M.chunk_fwd(vs_params[vs], tp, x, rope, vs_specs[vs], cfg)
+        ctxs[(vs, mb)] = cs
+        if vs == n_vs - 1:
+            loss, hc = M.head_fwd(params["head"], tp, y,
+                                  batches[mb]["labels"], cfg)
+            losses[mb] = loss
+            head_ctx[mb] = hc
+        else:
+            x_in[(vs + 1, mb)] = y
+
+    def run_b(vs, mb):
+        nonlocal g_embed, g_head_lm, g_head_joint
+        if vs == n_vs - 1:
+            gx, h_tape, h_joint = M.head_bwd_act(
+                params["head"], tp, head_ctx.pop(mb), jnp.float32(1.0), cfg)
+            head_tape[mb] = h_tape
+            g_head_joint = _merge_grads(g_head_joint, h_joint, scale)
+            gy = gx
+        else:
+            gy = g_in.pop((vs, mb))
+        gx, wts, joints = M.chunk_bwd_act(vs_params[vs], tp,
+                                          ctxs.pop((vs, mb)), gy,
+                                          vs_specs[vs], cfg)
+        tapes[(vs, mb)] = wts
+        a, _ = bounds[vs]
+        for i, j in enumerate(joints):
+            g_blocks[a + i] = _merge_grads(g_blocks[a + i], j, scale)
+        if vs == 0:
+            ge = M.embed_bwd_weight(params["embed"], embed_ctx.pop(mb), gx)
+            g_embed = _merge_grads(g_embed, ge, scale)
+        else:
+            g_in[(vs - 1, mb)] = gx
+
+    def run_w(vs, mb):
+        nonlocal g_head_lm
+        wts = tapes.pop((vs, mb))
+        gws = M.chunk_bwd_weight(wts, vs_specs[vs])
+        a, _ = bounds[vs]
+        for i, gw in enumerate(gws):
+            g_blocks[a + i] = _merge_grads(g_blocks[a + i], gw, scale)
+        if vs == n_vs - 1 and mb in head_tape:
+            gh = M.head_bwd_weight(head_tape.pop(mb))
+            g_head_lm = _merge_grads(g_head_lm, gh, scale)
+
+    # Execute in a *global* feasible order: round-robin the per-device
+    # streams, running each device's next instruction once its inputs exist.
+    ptr = [0] * pl.p
+    remaining = sum(len(t) for t in tables)
+    stall = 0
+    while remaining:
+        progressed = False
+        for d in range(pl.p):
+            if ptr[d] >= len(tables[d]):
+                continue
+            ins: Instr = tables[d][ptr[d]]
+            # feasibility: inputs present?
+            ok = True
+            if ins.f is not None:
+                vs, mb = ins.f
+                if vs > 0 and (vs, mb) not in x_in:
+                    ok = False
+            if ok and ins.b is not None:
+                vs, mb = ins.b
+                if vs == n_vs - 1:
+                    if mb not in head_ctx and ins.f != (vs, mb):
+                        ok = False
+                elif (vs, mb) not in g_in:
+                    ok = False
+            if ok and ins.w is not None and ins.w != ins.b:
+                if ins.w not in tapes:
+                    ok = False
+            if not ok:
+                continue
+            # run components in braid order: F units first, then B, then W.
+            if ins.f is not None:
+                run_f(*ins.f)
+            if ins.b is not None:
+                run_b(*ins.b)
+            if ins.w is not None:
+                run_w(*ins.w)
+            ptr[d] += 1
+            remaining -= 1
+            progressed = True
+        if not progressed:
+            stall += 1
+            if stall > 2:
+                raise RuntimeError(
+                    "pipeline reference executor stalled; next instrs: "
+                    + str([tables[d][ptr[d]] if ptr[d] < len(tables[d])
+                           else None for d in range(pl.p)]))
+        else:
+            stall = 0
+
+    # params unused by the graph (e.g. the token table of an embed-frontend
+    # arch) get explicit zero grads, matching jax.grad's structure.
+    g_embed_full = jax.tree.map(lambda x: jnp.zeros_like(x),
+                                params["embed"])
+    grads = {
+        "embed": _merge_grads(g_embed_full, g_embed or {}, 1.0),
+        "blocks": g_blocks,
+        "head": {**(g_head_lm or {}), **(g_head_joint or {})},
+    }
+    loss = sum(losses) * scale
+    return loss, grads
+
+
+def reference_grads(params, batches, cfg: ModelConfig,
+                    tp: TPContext = TPContext()):
+    """Monolithic jax.grad oracle over the same microbatches (mean loss)."""
+    m = len(batches)
+
+    def total_loss(p):
+        period = M.period_of(cfg)
+        stacked = {"embed": p["embed"],
+                   "blocks": M.stack_blocks(p["blocks"], period),
+                   "head": p["head"]}
+        return sum(M.loss_fn(stacked, b, cfg, tp=tp) for b in batches) / m
+
+    return jax.value_and_grad(total_loss)(params)

@@ -1,0 +1,132 @@
+"""Lockstep-slot conversion of schedule tables.
+
+The event-driven schedule is asynchronous; the SPMD executor runs one
+instruction per device per *slot* with a ``ppermute`` exchange at every slot
+boundary.  ``to_slots`` assigns each instruction its wavefront level —
+max(own device's previous slot, every dependency's slot) + 1 — which
+preserves program order and guarantees all cross-device inputs arrived in an
+earlier slot's exchange.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.simulator import Instr, Placement
+
+NOP = Instr("W", w=None)  # placeholder; encoded as all-zero codes
+
+# f codes
+F_NOP, F0, F0_EMBED, F0_TURN, F1, F1_LOSS = range(6)
+# b codes
+B_NOP, B0, B0_EMBED, B1, B1_TURN, B1_LOSS = range(6)
+# w codes
+W_NOP, W0, W1, W1_HEAD = range(4)
+
+
+def to_slots(tables, pl: Placement):
+    """-> list per device of list per slot of Optional[Instr]."""
+    p, n_vs = pl.p, pl.n_vs
+    level: dict = {}
+    dev_level = [-1] * p
+    ptr = [0] * p
+    slotted: list[list] = [[] for _ in range(p)]
+    remaining = sum(len(t) for t in tables)
+    while remaining:
+        progressed = False
+        for d in range(p):
+            if ptr[d] >= len(tables[d]):
+                continue
+            ins = tables[d][ptr[d]]
+            deps = []
+            ok = True
+            if ins.f is not None:
+                vs, mb = ins.f
+                if vs > 0:
+                    key = ("F", vs - 1, mb)
+                    if key not in level:
+                        ok = False
+                    else:
+                        deps.append(level[key])
+            if ok and ins.b is not None:
+                vs, mb = ins.b
+                if vs < n_vs - 1:
+                    key = ("B", vs + 1, mb)
+                    if key not in level:
+                        ok = False
+                    else:
+                        deps.append(level[key])
+                elif ins.f != (vs, mb):
+                    key = ("F", vs, mb)
+                    if key not in level:
+                        ok = False
+                    else:
+                        deps.append(level[key])
+            if ok and ins.w is not None and ins.w != ins.b:
+                key = ("B", *ins.w)
+                if key not in level:
+                    ok = False
+                else:
+                    # W consumes a locally-stored tape: no +1 needed, but
+                    # program order already enforces it on this device.
+                    deps.append(level[key] - 1)
+            if not ok:
+                continue
+            slot = max([dev_level[d]] + [x for x in deps]) + 1
+            for ph, vs, mb in ins.components():
+                level[(ph, vs, mb)] = slot
+            dev_level[d] = slot
+            slotted[d].append((slot, ins))
+            ptr[d] += 1
+            remaining -= 1
+            progressed = True
+        if not progressed:
+            raise RuntimeError("slot conversion stalled")
+    n_slots = max(dev_level) + 1
+    grid = [[None] * n_slots for _ in range(p)]
+    for d in range(p):
+        for slot, ins in slotted[d]:
+            grid[d][slot] = ins
+    return grid
+
+
+def encode(grid, pl: Placement) -> np.ndarray:
+    """-> int32 codes of shape (n_slots, p, 6):
+    [f_code, f_mb, b_code, b_mb, w_code, w_mb]."""
+    p = pl.p
+    n_slots = len(grid[0])
+    codes = np.zeros((n_slots, p, 6), np.int32)
+
+    def fc(vs, d):
+        if pl.chunk(vs) == 0:
+            if d == 0:
+                return F0_EMBED
+            return F0_TURN if d == p - 1 else F0
+        return F1_LOSS if d == 0 else F1
+
+    def bc(vs, d):
+        if pl.chunk(vs) == 0:
+            return B0_EMBED if d == 0 else B0
+        if d == 0:
+            return B1_LOSS
+        return B1_TURN if d == p - 1 else B1
+
+    def wc(vs, d):
+        if pl.chunk(vs) == 0:
+            return W0
+        return W1_HEAD if d == 0 else W1
+
+    for d in range(p):
+        for t, ins in enumerate(grid[d]):
+            if ins is None:
+                continue
+            if ins.f is not None:
+                codes[t, d, 0] = fc(ins.f[0], d)
+                codes[t, d, 1] = ins.f[1]
+            if ins.b is not None:
+                codes[t, d, 2] = bc(ins.b[0], d)
+                codes[t, d, 3] = ins.b[1]
+            if ins.w is not None:
+                codes[t, d, 4] = wc(ins.w[0], d)
+                codes[t, d, 5] = ins.w[1]
+    # special case p-1 == 0 cannot happen (p >= 2 enforced by caller)
+    return codes

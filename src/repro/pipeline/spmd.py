@@ -1,0 +1,443 @@
+"""SPMD pipeline executor: shard_map over a real ``stage`` mesh axis.
+
+One scanned program executes every device's instruction stream in lockstep
+slots.  Per slot each device
+
+  1. selects its instruction codes (``lax.switch`` over F/B/W sub-steps;
+     a braided F&B block is simply a slot whose F- and B-parts are both
+     active — inside one jitted slot their computations are data-independent,
+     which is precisely the legal-overlap window the paper engineers),
+  2. exchanges boundary tensors with its neighbours via two ``ppermute``s:
+     shift +1 carries chunk-0 activations and chunk-1 gradients (the "V"
+     down-sweep), shift −1 carries chunk-1 activations and chunk-0 gradients.
+
+Scope: V-shape placements (the paper's schedule family), uniform layer
+stacks (``n_layers % 2p == 0``), TP optionally composed via a ``model`` mesh
+axis.  Heterogeneous architectures run through ``pipeline.reference`` and the
+pjit path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.simulator import Placement
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.pipeline import slots as SL
+from repro.tp.context import TPContext
+
+
+def stack_stage_params(params, cfg: ModelConfig, p: int):
+    """Canonical params -> (chunk0, chunk1) stacked with leading (p, L_vs)
+    dims + embed/head.  chunk0 vs s = device s; chunk1 vs 2p-1-s = device s,
+    i.e. chunk1 stages are stacked in *device* order (reversed vs order)."""
+    n = cfg.n_layers
+    assert n % (2 * p) == 0, f"SPMD executor needs n_layers % 2p == 0 ({n}, {p})"
+    lvs = n // (2 * p)
+    blocks = params["blocks"]
+
+    def stack(layers):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+    c0 = stack([stack(blocks[s * lvs:(s + 1) * lvs]) for s in range(p)])
+    # device s hosts vs 2p-1-s -> layers [(2p-1-s)*lvs : (2p-s)*lvs]
+    c1 = stack([stack(blocks[(2 * p - 1 - s) * lvs:(2 * p - s) * lvs])
+                for s in range(p)])
+    return c0, c1, lvs
+
+
+def unstack_stage_grads(g0, g1, cfg: ModelConfig, p: int, lvs: int):
+    """Inverse of ``stack_stage_params`` for the gradient pytrees."""
+    blocks = [None] * cfg.n_layers
+    for s in range(p):
+        for i in range(lvs):
+            blocks[s * lvs + i] = jax.tree.map(lambda x: x[s, i], g0)
+            blocks[(2 * p - 1 - s) * lvs + i] = jax.tree.map(
+                lambda x: x[s, i], g1)
+    return blocks
+
+
+def _zeros_like_tree(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Megatron-style TP sharding rules for the unit-mode (shard_map) params.
+# Column-parallel: qkv / up projections split their output dim; row-parallel:
+# down/out projections split their input dim; norm gains, routers and small
+# core params are replicated; the LM head is vocab-parallel.
+# ---------------------------------------------------------------------------
+
+def _tp_axis_of(name: str, base_ndim: int):
+    """TP shard axis (negative, counted from the right) for a named param,
+    or None if replicated.  Column-parallel projections split their output
+    dim, row-parallel split their input dim, heads axes shard for the
+    head-blocked mLSTM mixers; routers / norms / small cores replicate.
+    sLSTM in-projections interleave four gate blocks and stay replicated
+    (DESIGN.md §Arch-applicability)."""
+    col2 = {"wg", "wu", "w1", "w_in_x", "w_in_z", "w_upx", "w_upz", "w_lm"}
+    row2 = {"wo", "wd", "w2", "w_out", "w_down"}
+    if name in ("wq", "wk", "wv"):
+        return -3 if base_ndim >= 3 else -1              # mlstm heads / attn
+    if name in ("wi", "wf"):
+        return -2                                        # mlstm gate heads
+    if name in col2:
+        return -1
+    if name in row2:
+        return -2
+    return None
+
+
+def tp_specs(tree, model_axis: Optional[str], stage_axis: Optional[str],
+             lead: int = 0):
+    """PartitionSpec tree for a params pytree.  ``lead`` extra leading dims
+    (stage stack + per-vs layer stack) precede the parameter's own dims; if
+    ``stage_axis`` is given it names the first of them."""
+    def one(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = k.key
+                break
+        spec = [None] * leaf.ndim
+        if stage_axis is not None:
+            spec[0] = stage_axis
+        ax = _tp_axis_of(name, leaf.ndim - lead) if model_axis else None
+        if ax is not None:
+            spec[leaf.ndim + ax] = model_axis
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def _stackm(tree, m):
+    return jax.tree.map(
+        lambda x: jnp.zeros((m,) + x.shape, x.dtype), tree)
+
+
+def _read(buf, mb):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, mb, 0, keepdims=False), buf)
+
+
+def _write(buf, mb, val):
+    return jax.tree.map(
+        lambda a, v: jax.lax.dynamic_update_index_in_dim(
+            a, v.astype(a.dtype), mb, 0), buf, val)
+
+
+def _local_sds(tree, tp_size: int, lead: int, strip: int):
+    """ShapeDtypeStructs of the per-device shards: drop ``strip`` leading
+    (stage) dims and divide TP-ruled axes by ``tp_size``."""
+    def one(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = k.key
+                break
+        shape = list(leaf.shape[strip:])
+        ax = _tp_axis_of(name, leaf.ndim - lead)
+        if ax is not None and tp_size > 1:
+            shape[ax] = shape[ax] // tp_size
+        return jax.ShapeDtypeStruct(tuple(shape), leaf.dtype)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
+                        m: int, mb_shape, param_trees, *,
+                        stage_axis: str = "stage",
+                        model_axis: Optional[str] = None):
+    """Returns a jitted SPMD function
+    ``step(c0, c1, embed_p, head_p, tokens, labels) -> (loss, g0, g1,
+    g_embed, g_head)`` executing the schedule over the ``stage`` (and
+    optionally ``model``) mesh axes.
+
+    mb_shape: (mb_batch, seq) of one microbatch.
+    param_trees: (c0, c1, embed_p, head_p) — global (unsharded) pytrees or
+    ShapeDtypeStructs; used to derive shard specs and local buffer shapes.
+    """
+    p = pl.p
+    grid = SL.to_slots(tables, pl)
+    codes = jnp.asarray(SL.encode(grid, pl))            # (L, p, 6)
+    tp = TPContext(axis=model_axis,
+                   size=(mesh.shape[model_axis] if model_axis else 1))
+    specs0 = cfg.layers[:cfg.n_layers // (2 * p)]       # uniform stacks
+    specs1 = specs0
+    bmb, seq = mb_shape
+    d_model = cfg.d_model
+    scale = 1.0 / m
+    rope = M._rope_for(cfg, seq)
+
+    def chunk_f(cparams, x, tpc=tp):
+        layers = [jax.tree.map(lambda a: a[i], cparams)
+                  for i in range(len(specs0))]
+        return M.chunk_fwd(layers, tpc, x, rope, specs0, cfg)
+
+    def chunk_b(cparams, ctxs, gy, tpc=tp):
+        layers = [jax.tree.map(lambda a: a[i], cparams)
+                  for i in range(len(specs0))]
+        return M.chunk_bwd_act(layers, tpc, ctxs, gy, specs0, cfg)
+
+    def chunk_w(tapes):
+        return M.chunk_bwd_weight(tapes, specs0)
+
+    # --- trace shapes for context/tape buffers --------------------------
+    x_sds = jax.ShapeDtypeStruct((bmb, seq, d_model), jnp.float32)
+    tok_sds = (jax.ShapeDtypeStruct((bmb, seq), jnp.int32)
+               if cfg.frontend == "text"
+               else jax.ShapeDtypeStruct((bmb, seq, d_model), jnp.float32))
+    lab_sds = jax.ShapeDtypeStruct((bmb, seq), jnp.int32)
+
+    # Buffer shapes are traced with an identity TPContext over the *local*
+    # shard shapes — collectives preserve shapes, so the unit-mode buffers
+    # match (eval_shape cannot bind mesh axis names).
+    tp0 = TPContext()
+    cp_sds = _local_sds(param_trees[0], tp.size, lead=2, strip=1)
+    _, ctx_sds = jax.eval_shape(lambda c, x: chunk_f(c, x, tp0),
+                                cp_sds, x_sds)
+    gx_sds, tape_sds, joint_sds = jax.eval_shape(
+        lambda c, cx, g: chunk_b(c, cx, g, tp0), cp_sds, ctx_sds, x_sds)
+    head_sds = _local_sds(param_trees[3], tp.size, lead=0, strip=0)
+    _, hctx_sds = jax.eval_shape(
+        lambda hp, x, lab: M.head_fwd(hp, tp0, x, lab, cfg),
+        head_sds, x_sds, lab_sds)
+    _, htape_sds, hjoint_sds = jax.eval_shape(
+        lambda hp, c: M.head_bwd_act(hp, tp0, c, jnp.float32(1.0), cfg),
+        head_sds, hctx_sds)
+
+    def zeros_of(sds_tree, lead=None):
+        return jax.tree.map(
+            lambda s: jnp.zeros(((lead,) + s.shape) if lead else s.shape,
+                                s.dtype), sds_tree)
+
+    def run(c0, c1, embed_p, head_p, tokens, labels):
+        """Per-device body (inside shard_map).  c0/c1 carry a leading
+        stage dim of 1."""
+        c0 = jax.tree.map(lambda a: a[0], c0)
+        c1 = jax.tree.map(lambda a: a[0], c1)
+        carry = {
+            "x0": jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32),
+            "x1": jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32),
+            "g0": jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32),
+            "g1": jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32),
+            "ctx0": zeros_of(ctx_sds, m), "ctx1": zeros_of(ctx_sds, m),
+            "tape0": zeros_of(tape_sds, m), "tape1": zeros_of(tape_sds, m),
+            "hctx": zeros_of(hctx_sds, m), "htape": zeros_of(htape_sds, m),
+            "loss": jnp.zeros((m,), jnp.float32),
+            "a0": _zeros_like_tree(c0), "a1": _zeros_like_tree(c1),
+            "ae": _zeros_like_tree(embed_p),
+            "ah": _zeros_like_tree(head_p),
+        }
+
+        def add_partial(acc, new, s=scale):
+            if isinstance(new, dict):
+                out = dict(acc)
+                for k, v in new.items():
+                    out[k] = add_partial(acc[k], v, s)
+                return out
+            return jax.tree.map(lambda a, b: a + s * b.astype(a.dtype),
+                                acc, new)
+
+        def add_layer(acc, i, new, s=scale):
+            """acc leaves have leading layer dim; new is one layer's partial
+            grad dict."""
+            if isinstance(new, dict):
+                out = dict(acc)
+                for k, v in new.items():
+                    out[k] = add_layer(acc[k], i, v, s)
+                return out
+            return acc.at[i].add(s * new.astype(acc.dtype))
+
+        # ---- F branches -------------------------------------------------
+        def f_nop(carry, mb):
+            z = jnp.zeros((bmb, seq, d_model), jnp.float32)
+            return carry, z, jnp.int32(0), z, jnp.int32(0)
+
+        def _f_chunk0(carry, mb, src):
+            y, ctxs = chunk_f(c0, src)
+            carry = dict(carry, ctx0=_write(carry["ctx0"], mb, ctxs))
+            return carry, y
+
+        def f0(carry, mb):
+            carry, y = _f_chunk0(carry, mb, _read(carry["x0"], mb))
+            z = jnp.zeros_like(y)
+            return carry, y, jnp.int32(1), z, jnp.int32(0)
+
+        def f0_embed(carry, mb):
+            batch = ({"tokens": _read(tokens, mb)} if cfg.frontend == "text"
+                     else {"embeds": _read(tokens, mb)})
+            x, _ = M.embed_fwd(embed_p, batch, cfg)
+            carry, y = _f_chunk0(carry, mb, x)
+            z = jnp.zeros_like(y)
+            return carry, y, jnp.int32(1), z, jnp.int32(0)
+
+        def f0_turn(carry, mb):
+            carry, y = _f_chunk0(carry, mb, _read(carry["x0"], mb))
+            carry = dict(carry, x1=_write(carry["x1"], mb, y))
+            z = jnp.zeros_like(y)
+            return carry, z, jnp.int32(0), z, jnp.int32(0)
+
+        def f1(carry, mb):
+            y, ctxs = chunk_f(c1, _read(carry["x1"], mb))
+            carry = dict(carry, ctx1=_write(carry["ctx1"], mb, ctxs))
+            z = jnp.zeros_like(y)
+            return carry, z, jnp.int32(0), y, jnp.int32(1)
+
+        def f1_loss(carry, mb):
+            y, ctxs = chunk_f(c1, _read(carry["x1"], mb))
+            loss, hctx = M.head_fwd(head_p, tp, y, _read(labels, mb), cfg)
+            carry = dict(carry,
+                         ctx1=_write(carry["ctx1"], mb, ctxs),
+                         hctx=_write(carry["hctx"], mb, hctx),
+                         loss=carry["loss"].at[mb].set(loss))
+            z = jnp.zeros((bmb, seq, d_model), jnp.float32)
+            return carry, z, jnp.int32(0), z, jnp.int32(0)
+
+        # ---- B branches -------------------------------------------------
+        def b_nop(carry, mb):
+            z = jnp.zeros((bmb, seq, d_model), jnp.float32)
+            return carry, z, jnp.int32(0), z, jnp.int32(0)
+
+        def _b_chunk(carry, mb, which, gy):
+            cp = c0 if which == 0 else c1
+            ctxs = _read(carry["ctx0" if which == 0 else "ctx1"], mb)
+            gx, tapes, joints = chunk_b(cp, ctxs, gy)
+            ck = "tape0" if which == 0 else "tape1"
+            ak = "a0" if which == 0 else "a1"
+            carry = dict(carry)
+            carry[ck] = _write(carry[ck], mb, tapes)
+            acc = carry[ak]
+            for i, j in enumerate(joints):
+                acc = add_layer(acc, i, j)
+            carry[ak] = acc
+            return carry, gx
+
+        def b0(carry, mb):
+            carry, gx = _b_chunk(carry, mb, 0, _read(carry["g0"], mb))
+            z = jnp.zeros_like(gx)
+            return carry, z, jnp.int32(0), gx, jnp.int32(1)
+
+        def b0_embed(carry, mb):
+            carry, gx = _b_chunk(carry, mb, 0, _read(carry["g0"], mb))
+            batch = ({"tokens": _read(tokens, mb)} if cfg.frontend == "text"
+                     else {"embeds": _read(tokens, mb)})
+            _, ectx = M.embed_fwd(embed_p, batch, cfg)
+            ge = M.embed_bwd_weight(embed_p, ectx, gx)
+            carry = dict(carry, ae=add_partial(carry["ae"], ge))
+            z = jnp.zeros_like(gx)
+            return carry, z, jnp.int32(0), z, jnp.int32(0)
+
+        def b1(carry, mb):
+            carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
+            z = jnp.zeros_like(gx)
+            return carry, gx, jnp.int32(1), z, jnp.int32(0)
+
+        def b1_turn(carry, mb):
+            carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
+            carry = dict(carry, g0=_write(carry["g0"], mb, gx))
+            z = jnp.zeros_like(gx)
+            return carry, z, jnp.int32(0), z, jnp.int32(0)
+
+        def b1_loss(carry, mb):
+            hctx = _read(carry["hctx"], mb)
+            gy, htape, hjoint = M.head_bwd_act(head_p, tp, hctx,
+                                               jnp.float32(1.0), cfg)
+            carry = dict(carry,
+                         htape=_write(carry["htape"], mb, htape),
+                         ah=add_partial(carry["ah"], hjoint))
+            carry, gx = _b_chunk(carry, mb, 1, gy)
+            z = jnp.zeros_like(gx)
+            return carry, gx, jnp.int32(1), z, jnp.int32(0)
+
+        # ---- W branches -------------------------------------------------
+        def w_nop(carry, mb):
+            return carry
+
+        def _w_chunk(carry, mb, which):
+            ck = "tape0" if which == 0 else "tape1"
+            ak = "a0" if which == 0 else "a1"
+            gws = chunk_w(_read(carry[ck], mb))
+            acc = carry[ak]
+            for i, gw in enumerate(gws):
+                acc = add_layer(acc, i, gw)
+            carry = dict(carry)
+            carry[ak] = acc
+            return carry
+
+        def w0(carry, mb):
+            return _w_chunk(carry, mb, 0)
+
+        def w1(carry, mb):
+            return _w_chunk(carry, mb, 1)
+
+        def w1_head(carry, mb):
+            carry = _w_chunk(carry, mb, 1)
+            gh = M.head_bwd_weight(_read(carry["htape"], mb))
+            return dict(carry, ah=add_partial(carry["ah"], gh))
+
+        # ---- slot body ----------------------------------------------------
+        me = jax.lax.axis_index(stage_axis)
+        perm_up = [(s, s + 1) for s in range(p - 1)]
+        perm_dn = [(s, s - 1) for s in range(1, p)]
+
+        def slot(carry, codes_t):
+            my = codes_t[me]
+            fmb, bmb_, wmb = my[1], my[3], my[5]
+            carry, up_a, up_av, dn_a, dn_av = jax.lax.switch(
+                my[0], [f_nop, f0, f0_embed, f0_turn, f1, f1_loss],
+                carry, fmb)
+            carry, up_g, up_gv, dn_g, dn_gv = jax.lax.switch(
+                my[2], [b_nop, b0, b0_embed, b1, b1_turn, b1_loss],
+                carry, bmb_)
+            carry = jax.lax.switch(
+                my[4], [w_nop, w0, w1, w1_head], carry, wmb)
+            # exchange.  mb indices are sent +1 so that the zeros a device
+            # receives when it has no upstream decode as "invalid" and land
+            # in the scratch row m.
+            def send(payload, perm):
+                return jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, stage_axis, perm), payload)
+
+            rx0, rx0_mb, rg1, rg1_mb = send(
+                (up_a, jnp.where(up_av > 0, fmb + 1, 0),
+                 up_g, jnp.where(up_gv > 0, bmb_ + 1, 0)), perm_up)
+            rx1, rx1_mb, rg0, rg0_mb = send(
+                (dn_a, jnp.where(dn_av > 0, fmb + 1, 0),
+                 dn_g, jnp.where(dn_gv > 0, bmb_ + 1, 0)), perm_dn)
+            slot_of = lambda idx: jnp.where(idx > 0, idx - 1, m)
+            carry = dict(
+                carry,
+                x0=_write(carry["x0"], slot_of(rx0_mb), rx0),
+                g1=_write(carry["g1"], slot_of(rg1_mb), rg1),
+                x1=_write(carry["x1"], slot_of(rx1_mb), rx1),
+                g0=_write(carry["g0"], slot_of(rg0_mb), rg0),
+            )
+            return carry, None
+
+        carry, _ = jax.lax.scan(slot, carry, codes)
+        loss = jax.lax.psum(carry["loss"].sum() * scale, stage_axis)
+        g0 = jax.tree.map(lambda a: a[None], carry["a0"])
+        g1 = jax.tree.map(lambda a: a[None], carry["a1"])
+        ge = jax.tree.map(lambda a: jax.lax.psum(a, stage_axis), carry["ae"])
+        gh = jax.tree.map(lambda a: jax.lax.psum(a, stage_axis), carry["ah"])
+        return loss, g0, g1, ge, gh
+
+    rep = P()
+    c_spec = lambda tree: tp_specs(tree, model_axis, stage_axis, lead=2)
+    e_spec = lambda tree: tp_specs(tree, None, None)
+    h_spec = lambda tree: tp_specs(tree, model_axis, None)
+    fn = shard_map(
+        run, mesh=mesh,
+        in_specs=(c_spec(param_trees[0]), c_spec(param_trees[1]),
+                  e_spec(param_trees[2]), h_spec(param_trees[3]), rep, rep),
+        out_specs=(rep, c_spec(param_trees[0]), c_spec(param_trees[1]),
+                   e_spec(param_trees[2]), h_spec(param_trees[3])),
+        check_rep=False,
+    )
+    return jax.jit(fn)

@@ -1,0 +1,3 @@
+from repro.tp.context import TPContext
+
+__all__ = ["TPContext"]

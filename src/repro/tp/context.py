@@ -1,0 +1,57 @@
+"""Tensor-parallel execution context.
+
+Two call modes share one model definition (single source of truth — the unit
+forward functions in ``repro.models.units``):
+
+* **unit mode** (``axis`` set): running under ``shard_map`` over the TP mesh
+  axis.  Params are per-rank shards; the unit code places the paper's
+  collectives explicitly — the ``f``/``g`` operators of Fig. 2 — and applies
+  the Eq. (1) residual fusion ``AR(partial + detach(res)/t)``.
+* **pjit mode** (``axis`` is None): global-view arrays under ``pjit`` with
+  sharding constraints; XLA SPMD inserts the collectives.  ``psum`` is the
+  identity and the residual is added plainly (no detach — gradient flows
+  through the residual normally, which is what Eq. (2)'s "+1" reproduces by
+  hand in unit mode).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class TPContext:
+    axis: Optional[str] = None
+    size: int = 1
+
+    def psum(self, x):
+        if self.axis is None:
+            return x
+        return jax.lax.psum(x, self.axis)
+
+    def pmax(self, x):
+        if self.axis is None:
+            return x
+        return jax.lax.pmax(x, self.axis)
+
+    def axis_index(self):
+        if self.axis is None:
+            return jnp.int32(0)
+        return jax.lax.axis_index(self.axis)
+
+    def fuse_residual(self, partial, residual):
+        """Eq. (1): the unit output collective with the residual fused in.
+
+        unit mode: AR(partial + detach(residual)/t) — each of the t ranks
+        contributes residual/t, summing back to exactly ``residual``; the
+        gradient of the residual branch is re-attached in ``bwd_act`` as the
+        "+1" term of Eq. (2).
+        pjit mode: plain ``partial + residual``.
+        """
+        if self.axis is None:
+            return partial + residual
+        return jax.lax.psum(
+            partial + jax.lax.stop_gradient(residual) / self.size, self.axis)

@@ -1,0 +1,14 @@
+"""Suite-wide hygiene: the full suite jits hundreds of shape variants in
+one process; clearing jax's compile caches between modules keeps the
+1-core/35GB container from exhausting memory (LLVM OOM) late in the run."""
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,88 @@
+"""The dry-run's HLO cost model: dot flops, post-fusion bytes, collectives
+— validated on hand-written HLO snippets and one real compiled module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_module
+
+HLO = """\
+HloModule test
+
+%fused_add (p0: f32[128,64], p1: f32[128,64]) -> f32[128,64] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %p1 = f32[128,64]{1,0} parameter(1)
+  ROOT %add.1 = f32[128,64]{1,0} add(%p0, %p1)
+}
+
+ENTRY %main (a: f32[128,256], w: f32[256,64]) -> f32[128,64] {
+  %a = f32[128,256]{1,0} parameter(0)
+  %w = f32[256,64]{1,0} parameter(1)
+  %dot.1 = f32[128,64]{1,0} dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,64]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%fused_add
+  ROOT %fusion.1 = f32[128,64]{1,0} fusion(%dot.1, %ar), kind=kLoop, calls=%fused_add
+}
+"""
+
+
+def test_parse_and_costs_on_snippet():
+    r = analyze(HLO)
+    assert r["flops"] == 2 * 128 * 64 * 256
+    assert r["collective_bytes"] == 128 * 64 * 4
+    assert r["collectives"] == {"all-reduce": 128 * 64 * 4}
+    # bytes: dot(res+a+w) + ar(res+dot) + fusion(res + dot + ar)
+    b = (128 * 64 + 128 * 256 + 256 * 64) * 4 \
+        + (128 * 64 + 128 * 64) * 4 + (128 * 64 * 3) * 4
+    assert r["bytes"] == b
+
+
+def test_on_real_compiled_module():
+    def f(x, w1, w2):
+        return jnp.tanh(x @ w1) @ w2
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    comp = jax.jit(f).lower(x, w1, w2).compile()
+    r = analyze(comp.as_text())
+    expect = 2 * 64 * 128 * 256 + 2 * 64 * 256 * 32
+    assert r["flops"] == pytest.approx(expect, rel=0.01)
+    assert r["collective_bytes"] == 0
+
+
+def test_while_trip_multiplier():
+    hlo = """\
+HloModule t
+
+%body (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %ar2 = f32[8]{0} all-reduce(%p), replica_groups={}
+  ROOT %n = f32[8]{0} negate(%ar2)
+}
+
+%cond (p: f32[8]) -> pred[] {
+  %p = f32[8]{0} parameter(0)
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (x: f32[8]) -> f32[8] {
+  %x = f32[8]{0} parameter(0)
+  ROOT %w = f32[8]{0} while(%x), condition=%cond, body=%body
+}
+"""
+    r1 = analyze(hlo, while_trips=1)
+    r5 = analyze(hlo, while_trips=5)
+    assert r5["collective_bytes"] == 5 * r1["collective_bytes"]
+    assert r1["n_while"] == 1
+
+
+def test_model_flops_active_params():
+    from repro.configs import get_config
+    from repro.launch.dryrun import active_params
+    # olmoe: ~1.3B active of ~6.9B total (64 experts, top-8)
+    cfg = get_config("olmoe-1b-7b")
+    act = active_params(cfg)
+    assert 0.8e9 < act < 2.0e9
+    dense = get_config("qwen3-4b")
+    assert 3e9 < active_params(dense) < 6e9

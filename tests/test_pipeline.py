@@ -1,0 +1,150 @@
+"""Pipeline executor equivalence: the braided F/B/W schedule execution must
+reproduce ``jax.grad`` exactly — for every schedule kind, across
+architecture families, and on a real multi-device stage (and stage x model)
+mesh (subprocess: device count must be fixed before jax initializes)."""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.schedule import SCHEDULES, build
+from repro.models import model as M
+from repro.pipeline.reference import pipeline_grads, reference_grads
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def make_batches(cfg, key, m, b, s):
+    ks = jax.random.split(key, m)
+    out = []
+    for k in ks:
+        lab = jax.random.randint(k, (b, s), 0, cfg.vocab)
+        if cfg.frontend == "text":
+            out.append({"tokens": jax.random.randint(k, (b, s), 0, cfg.vocab),
+                        "labels": lab})
+        else:
+            out.append({"embeds": jax.random.normal(k, (b, s, cfg.d_model)),
+                        "labels": lab})
+    return out
+
+
+def rel_err(g, g_ref):
+    fp, tp_ = jax.tree.flatten(g)
+    fr, tr = jax.tree.flatten(g_ref)
+    assert tr == tp_
+    return max(float(np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9))
+               for a, b in zip(fp, fr))
+
+
+@pytest.mark.parametrize("kind", SCHEDULES)
+def test_reference_executor_matches_grad(kind):
+    cfg = get_config("qwen3-4b").reduced(n_layers=4, d_model=64, n_heads=4,
+                                         vocab=128)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    batches = make_batches(cfg, key, m=6, b=2, s=16)
+    loss_ref, g_ref = reference_grads(params, batches, cfg)
+    tables, pl = build(kind, 2, len(batches))
+    loss, g = pipeline_grads(params, batches, tables, pl, cfg)
+    assert np.allclose(loss, loss_ref, rtol=1e-5)
+    assert rel_err(g, g_ref) < 1e-4
+
+
+@pytest.mark.parametrize("arch,extra", [
+    ("olmoe-1b-7b", {}),                         # MoE unit path
+    ("xlstm-125m", {"n_layers": 4}),             # sLSTM + mLSTM scan cores
+    ("jamba-1.5-large-398b", {"n_layers": 4}),   # mamba + MoE hybrid
+    ("hubert-xlarge", {}),                       # encoder-only, layernorm
+    ("gemma3-12b", {}),                          # sliding window + GeGLU
+    ("llava-next-mistral-7b", {}),               # embed frontend
+])
+def test_stp_executor_across_families(arch, extra):
+    cfg = get_config(arch).reduced(n_layers=extra.get("n_layers", 2),
+                                   d_model=64, n_heads=4, vocab=128)
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(key, cfg)
+    batches = make_batches(cfg, key, m=4, b=2, s=16)
+    loss_ref, g_ref = reference_grads(params, batches, cfg)
+    tables, pl = build("stp", 2, len(batches))
+    loss, g = pipeline_grads(params, batches, tables, pl, cfg)
+    assert np.allclose(loss, loss_ref, rtol=1e-5), (loss, loss_ref)
+    assert rel_err(g, g_ref) < 2e-4
+
+
+def _run_sub(script: str):
+    r = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        cwd=str(REPO), env={"PYTHONPATH": str(REPO / "src"),
+                            "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"},
+        timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+SPMD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_config
+from repro.core.schedule import build
+from repro.models import model as M
+from repro.pipeline.reference import reference_grads
+from repro.pipeline.spmd import (build_pipeline_step, stack_stage_params,
+                                 unstack_stage_grads)
+
+p, tp_size = {p}, {tp}
+cfg = get_config("qwen3-4b").reduced(n_layers=2*p, d_model=64, n_heads=4,
+                                     vocab=128)
+key = jax.random.PRNGKey(0)
+params = M.init_params(key, cfg)
+m, b, s = {m}, 2, 16
+ks = jax.random.split(key, m)
+batches = [{{"tokens": jax.random.randint(k, (b, s), 0, cfg.vocab),
+            "labels": jax.random.randint(k, (b, s), 0, cfg.vocab)}}
+           for k in ks]
+loss_ref, g_ref = reference_grads(params, batches, cfg)
+mesh = Mesh(np.array(jax.devices()).reshape(p, tp_size), ("stage", "model"))
+tables, pl = build("{kind}", p, m)
+c0, c1, lvs = stack_stage_params(params, cfg, p)
+step = build_pipeline_step(cfg, tables, pl, mesh, m, (b, s),
+                           (c0, c1, params["embed"], params["head"]),
+                           model_axis={model_axis})
+tokens = jnp.stack([bb["tokens"] for bb in batches])
+labels = jnp.stack([bb["labels"] for bb in batches])
+with mesh:
+    loss, g0, g1, ge, gh = step(c0, c1, params["embed"], params["head"],
+                                tokens, labels)
+assert np.allclose(loss, loss_ref, rtol=1e-5), (loss, loss_ref)
+blocks = unstack_stage_grads(jax.device_get(g0), jax.device_get(g1),
+                             cfg, p, lvs)
+g = {{"embed": jax.device_get(ge), "blocks": blocks,
+     "head": jax.device_get(gh)}}
+fr, tr = jax.tree.flatten(g_ref)
+fp, tp_ = jax.tree.flatten(g)
+assert tr == tp_
+err = max(float(np.max(np.abs(a - bb)) / (np.max(np.abs(bb)) + 1e-9))
+          for a, bb in zip(fp, fr))
+assert err < 1e-4, err
+print("OK", float(loss), err)
+"""
+
+
+@pytest.mark.parametrize("kind,p,tp,ndev", [
+    ("stp", 4, 1, 4),          # pure PP, 4 stages
+    ("stp", 2, 2, 4),          # synergistic TP x PP (the paper's setting)
+    ("zb-v", 2, 2, 4),
+    ("stp-memeff", 2, 2, 4),
+])
+def test_spmd_executor_multidevice(kind, p, tp, ndev):
+    script = SPMD_SCRIPT.format(
+        ndev=ndev, p=p, tp=tp, m=6, kind=kind,
+        model_axis='"model"' if tp > 1 else "None")
+    out = _run_sub(script)
+    assert "OK" in out

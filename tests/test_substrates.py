@@ -1,0 +1,143 @@
+"""Substrate behaviour: data pipeline, optimizer, checkpointing, serving
+driver, and shardings helpers."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import DataConfig, make_batches, microbatches
+from repro.data.pipeline import SyntheticTextDataset, pack_documents
+from repro.models import model as M
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+
+def test_synthetic_data_learnable_structure():
+    """The Markov corpus must be more predictable than uniform (otherwise
+    the e2e training demo can't show loss decreasing)."""
+    cfg = get_config("qwen3-4b").reduced(d_model=64, n_heads=4, vocab=128)
+    ds = SyntheticTextDataset(cfg, DataConfig(seed=1))
+    toks = ds.sample_tokens(4, 512)
+    assert toks.shape == (4, 512)
+    assert toks.min() >= 0 and toks.max() < 128
+    # bigram predictability: repeated contexts share successors more often
+    # than chance
+    from collections import Counter, defaultdict
+    succ = defaultdict(Counter)
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            succ[int(a)][int(b)] += 1
+    top_mass = [c.most_common(1)[0][1] / sum(c.values())
+                for c in succ.values() if sum(c.values()) >= 8]
+    assert np.mean(top_mass) > 2.0 / 128
+
+
+def test_data_shapes_and_masking():
+    cfg_t = get_config("qwen3-4b").reduced(d_model=64, n_heads=4, vocab=128)
+    dc = DataConfig(seq_len=32, global_batch=4)
+    b = next(make_batches(cfg_t, dc, 1))
+    assert b["tokens"].shape == (4, 32) and b["labels"].shape == (4, 32)
+    # encoder-only masked prediction
+    cfg_e = get_config("hubert-xlarge").reduced(d_model=64, n_heads=4,
+                                                vocab=128)
+    b = next(make_batches(cfg_e, dc, 1))
+    assert b["embeds"].shape == (4, 32, 64)
+    assert (b["labels"] >= 0).mean() < 0.5    # most positions unmasked
+
+
+def test_pack_documents():
+    docs = [np.arange(5), np.arange(7), np.arange(3)]
+    packed = pack_documents(docs, seq=6, eod=999)
+    assert packed.shape[1] == 6
+    assert (packed == 999).sum() >= 2
+
+
+def test_microbatch_split_roundtrip():
+    batch = {"tokens": jnp.arange(32).reshape(8, 4)}
+    mbs = microbatches(batch, 4)
+    assert len(mbs) == 4 and mbs[0]["tokens"].shape == (2, 4)
+    re = jnp.concatenate([m["tokens"] for m in mbs])
+    np.testing.assert_array_equal(np.asarray(re),
+                                  np.asarray(batch["tokens"]))
+
+
+def test_adamw_descends_quadratic():
+    oc = OptConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                   weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params)
+    for _ in range(60):
+        g = {"w": 2 * params["w"]}
+        params, state, gn = adamw_update(params, g, state, oc)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_grad_clip():
+    from repro.optim.adamw import clip_by_global_norm
+    g = {"a": jnp.full((10,), 100.0)}
+    c, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) > 100
+    norm = float(jnp.sqrt((c["a"] ** 2).sum()))
+    assert abs(norm - 1.0) < 1e-5
+
+
+def test_checkpoint_roundtrip():
+    cfg = get_config("olmoe-1b-7b").reduced(d_model=64, n_heads=4, vocab=128)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, (params, opt), step=7, extra={"arch": cfg.name})
+        zeros = jax.tree.map(jnp.zeros_like, (params, opt))
+        (p2, o2), step, extra = load_checkpoint(d, zeros)
+        assert step == 7 and extra["arch"] == cfg.name
+        ref = jax.tree.leaves(params)
+        got = jax.tree.leaves(p2)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_training_reduces_loss():
+    """E2E sanity: 30 pjit-path steps on the synthetic corpus reduce loss."""
+    cfg = get_config("qwen3-4b").reduced(n_layers=2, d_model=64, n_heads=4,
+                                         vocab=128)
+    dc = DataConfig(seq_len=64, global_batch=8)
+    oc = OptConfig(lr=3e-3, warmup_steps=3, total_steps=30)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    stacked = {"embed": params["embed"],
+               "blocks": M.stack_blocks(params["blocks"], M.period_of(cfg)),
+               "head": params["head"]}
+    opt = adamw_init(stacked)
+
+    @jax.jit
+    def step(p, o, batch):
+        loss, g = jax.value_and_grad(
+            lambda pp: M.loss_fn(pp, batch, cfg))(p)
+        p2, o2, _ = adamw_update(p, g, o, oc)
+        return p2, o2, loss
+
+    losses = []
+    for batch in make_batches(cfg, dc, 30):
+        stacked, opt, loss = step(stacked, opt,
+                                  {k: jnp.asarray(v)
+                                   for k, v in batch.items()})
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.25, (losses[0], losses[-1])
+
+
+def test_shardings_divisibility_fallback():
+    """hubert's 504 vocab can't shard 16 ways -> replicated, not an error."""
+    import os
+    from jax.sharding import PartitionSpec as P
+    # synthesize a fake mesh-shape object (no devices needed for specs)
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    from repro.launch.shardings import ShardOptions, param_specs
+    cfg = get_config("hubert-xlarge")
+    tree = {"head": {"w_lm": jnp.zeros((1280, 504))},
+            "blocks": [{"mixer": {"wq": jnp.zeros((1280, 1280))}}]}
+    specs = param_specs(tree, FakeMesh(), cfg, ShardOptions())
+    assert specs["head"]["w_lm"] == P(None, None)          # 504 % 16 != 0
+    assert specs["blocks"][0]["mixer"]["wq"] == P(None, "model")

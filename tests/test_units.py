@@ -1,0 +1,242 @@
+"""Fine-grained unit F/B/W correctness: every unit's hand-split backward
+(B propagates activations + joint core grads, W consumes the weight tape)
+must equal jax.grad of its own forward — per unit kind, plus hypothesis
+property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import autograd as ag
+from repro.models import model as M, ssm, units
+from repro.models.config import LayerSpec, ModelConfig
+from repro.tp.context import TPContext
+
+TP0 = TPContext()
+KEY = jax.random.PRNGKey(7)
+
+
+def check_layer_fbw(cfg, spec, key, b=2, s=16, atol=2e-4):
+    """layer_bwd_act + layer_bwd_weight == jax.grad(layer loss)."""
+    params = M.init_layer(key, spec, cfg, 0.02)
+    x = jax.random.normal(key, (b, s, cfg.d_model))
+    rope = M._rope_for(cfg, s)
+
+    def loss(p, x):
+        y, _ = M.layer_fwd(p, TP0, x, rope, spec, cfg)
+        return (y.astype(jnp.float32) ** 2).sum()
+
+    (g_ref, gx_ref) = jax.grad(loss, argnums=(0, 1))(params, x)
+
+    y, ctx = M.layer_fwd(params, TP0, x, rope, spec, cfg)
+    gy = (2 * y).astype(y.dtype)
+    gx, wtape, joints = M.layer_bwd_act(params, TP0, ctx, gy, spec, cfg)
+    gw = M.layer_bwd_weight(wtape, spec)
+
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                               atol=atol, rtol=1e-3)
+    merged = {}
+
+    def merge(dst, src):
+        for k, v in src.items():
+            if isinstance(v, dict):
+                merge(dst.setdefault(k, {}), v)
+            else:
+                dst[k] = dst.get(k, 0) + v
+
+    merge(merged, joints)
+    merge(merged, gw)
+    flat_ref, td_ref = jax.tree_util.tree_flatten(g_ref)
+    flat, td = jax.tree_util.tree_flatten(merged)
+    assert td == td_ref, (td, td_ref)
+    for a, r in zip(flat, flat_ref):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(r, np.float32),
+                                   atol=atol, rtol=2e-3)
+
+
+@pytest.mark.parametrize("mixer,mlp,qk,win", [
+    ("attn", "gated", False, None),
+    ("attn", "plain", False, None),
+    ("attn", "gated", True, None),       # qk_norm (qwen3)
+    ("attn", "gated", False, 8),         # sliding window (gemma3)
+    ("attn", "moe", False, None),        # MoE layer (olmoe)
+    ("mamba", "gated", False, None),     # jamba mamba layer
+    ("mlstm", "none", False, None),      # xlstm
+    ("slstm", "none", False, None),
+])
+def test_layer_fbw_matches_grad(mixer, mlp, qk, win):
+    from repro.models.config import MoEConfig
+    cfg = ModelConfig(
+        name="t", family="dense", d_model=64, n_heads=4, kv_heads=2,
+        d_ff=128, vocab=97,
+        layers=(LayerSpec(mixer=mixer, mlp=mlp, qk_norm=qk, window=win),),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff=64) if mlp == "moe"
+        else None,
+        use_rope=(mixer == "attn"))
+    check_layer_fbw(cfg, cfg.layers[0], KEY)
+
+
+def test_head_fbw_matches_grad():
+    cfg = get_config("qwen3-4b").reduced(n_layers=1, d_model=64, n_heads=4,
+                                         vocab=128)
+    params = M.init_params(KEY, cfg)["head"]
+    x = jax.random.normal(KEY, (2, 8, 64))
+    labels = jax.random.randint(KEY, (2, 8), 0, 128)
+
+    def loss(p, x):
+        l, _ = M.head_fwd(p, TP0, x, labels, cfg)
+        return l
+
+    g_ref, gx_ref = jax.grad(loss, argnums=(0, 1))(params, x)
+    l, ctx = M.head_fwd(params, TP0, x, labels, cfg)
+    gx, wtape, joint = M.head_bwd_act(params, TP0, ctx, jnp.float32(1.0),
+                                      cfg)
+    gw = M.head_bwd_weight(wtape)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw["w_lm"]),
+                               np.asarray(g_ref["w_lm"]), atol=1e-5,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(joint["ln_f"]["g"]),
+                               np.asarray(g_ref["ln_f"]["g"]), atol=1e-5,
+                               rtol=1e-3)
+
+
+def test_residual_fusion_tp_equivalence():
+    """Eq. (1)/(2): the fused-residual unit under a real shard_map TP group
+    equals the unfused single-device computation (fwd and bwd)."""
+    import subprocess, sys, textwrap
+    from pathlib import Path
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.models import model as M, units
+        from repro.models.config import LayerSpec, ModelConfig
+        from repro.tp.context import TPContext
+
+        cfg = ModelConfig(name="t", family="dense", d_model=64, n_heads=4,
+                          kv_heads=4, d_ff=128, vocab=97,
+                          layers=(LayerSpec(),))
+        spec = cfg.layers[0]
+        key = jax.random.PRNGKey(0)
+        params = M.init_layer(key, spec, cfg, 0.02)
+        x = jax.random.normal(key, (2, 16, 64))
+        rope = M._rope_for(cfg, 16)
+        y_ref, _ = M.layer_fwd(params, TPContext(), x, rope, spec, cfg)
+
+        mesh = Mesh(np.array(jax.devices()), ("model",))
+        tp = TPContext(axis="model", size=4)
+        pspec = {"ln1": {"g": P()}, "ln2": {"g": P()},
+                 "mixer": {"wq": P(None, "model"), "wk": P(None, "model"),
+                           "wv": P(None, "model"), "wo": P("model", None)},
+                 "mlp": {"wg": P(None, "model"), "wu": P(None, "model"),
+                         "wd": P("model", None)}}
+
+        def f(p, x):
+            y, ctx = M.layer_fwd(p, tp, x, rope, spec, cfg)
+            gx, wt, j = M.layer_bwd_act(p, tp, ctx, 2 * y, spec, cfg)
+            return y, gx
+
+        y, gx = shard_map(f, mesh=mesh, in_specs=(pspec, P()),
+                          out_specs=(P(), P()), check_rep=False)(params, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=2e-5, rtol=1e-4)
+        # bwd vs autodiff
+        gx_ref = jax.grad(lambda xx: (M.layer_fwd(params, TPContext(), xx,
+                          rope, spec, cfg)[0] ** 2).sum())(x)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                                   atol=2e-4, rtol=1e-3)
+        print("OK")
+    """)
+    repo = Path(__file__).resolve().parent.parent
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env={"PYTHONPATH": str(repo / "src"),
+                                       "PATH": "/usr/bin:/bin"},
+                       timeout=600)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 3), s=st.integers(1, 33), causal=st.booleans(),
+       hq=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2]))
+def test_flash_attention_matches_reference_property(b, s, causal, hq, g):
+    from repro.models.attention_core import (flash_attention,
+                                             reference_attention)
+    hkv = max(1, hq // g)
+    hq = hkv * g
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * 100 + s), 3)
+    q = jax.random.normal(k1, (b, hq, s, 8))
+    k = jax.random.normal(k2, (b, hkv, s, 8))
+    v = jax.random.normal(k3, (b, hkv, s, 8))
+    o = flash_attention(q, k, v, causal, None)
+    r = reference_attention(q, k, v, causal, None)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5,
+                               rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.integers(2, 40), k=st.integers(1, 4), e=st.sampled_from([4, 8]),
+       cap=st.floats(0.5, 2.0))
+def test_moe_routing_invariants(s, k, e, cap):
+    """Router invariants: capacity positions are unique per expert, kept
+    tokens never exceed capacity, gates are a valid sub-distribution."""
+    from repro.models.config import MoEConfig
+    from repro.models.units import _gates_core, _route, moe_capacity
+    k = min(k, e)
+    moe = MoEConfig(num_experts=e, top_k=k, d_ff=8, capacity_factor=cap)
+    C = moe_capacity(s, moe)
+    logits = jax.random.normal(jax.random.PRNGKey(s * 7 + k), (1, s, e))
+    idx, pos, keep = _route(logits, k, C)
+    idx, pos, keep = (np.asarray(idx[0]), np.asarray(pos[0]),
+                      np.asarray(keep[0]))
+    # no duplicate (expert, slot) among kept tokens
+    slots = [(int(idx[i, j]), int(pos[i, j]))
+             for i in range(s) for j in range(k) if keep[i, j] > 0]
+    assert len(slots) == len(set(slots))
+    assert pos.max(initial=0) < C
+    gates = np.asarray(_gates_core(logits, jnp.asarray(idx)[None]))[0]
+    assert np.all(gates >= 0) and np.all(gates.sum(-1) <= 1 + 1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.integers(1, 50), chunk=st.sampled_from([4, 16, 64]))
+def test_chunked_scan_equals_plain_scan(s, chunk):
+    def step(c, x):
+        return c * 0.9 + x, c + x
+
+    xs = jax.random.normal(jax.random.PRNGKey(s), (s, 8))
+    c1, y1 = jax.lax.scan(step, jnp.zeros(8), xs)
+    c2, y2 = ssm.chunked_scan(step, jnp.zeros(8), xs, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(1, 64), mult=st.sampled_from([8, 128]))
+def test_pad_roundtrip(n, mult):
+    from repro.models.attention_core import _pad_to
+    x = jnp.ones((2, n, 4))
+    p = _pad_to(x, mult, 1)
+    assert p.shape[1] % mult == 0
+    np.testing.assert_array_equal(np.asarray(p[:, :n]), np.asarray(x))
+
+
+@settings(max_examples=8, deadline=None)
+@given(steps=st.integers(1, 30))
+def test_lr_schedule_monotone_warmup(steps):
+    from repro.optim.adamw import OptConfig, lr_at
+    oc = OptConfig(warmup_steps=10, total_steps=50)
+    lrs = [float(lr_at(oc, i)) for i in range(steps)]
+    warm = lrs[: min(steps, 10)]
+    assert all(b >= a - 1e-9 for a, b in zip(warm, warm[1:]))
+    assert all(l <= oc.lr + 1e-9 for l in lrs)
