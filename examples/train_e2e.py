@@ -1,11 +1,16 @@
-"""End-to-end training driver: data pipeline -> STP pipeline schedule ->
+"""End-to-end training driver: data pipeline -> pipeline schedule ->
 AdamW -> checkpoint, with a verifying loss curve.
+
+Any of the six schedule kinds works (``--schedule``); all lower through the
+same table -> IR -> executor stack, so the loss curve is schedule-invariant
+up to float reassociation.
 
 Default scale is CPU-friendly (~1M params, 60 steps, loss must drop);
 ``--full`` trains a ~100M-param model for 300 steps (the deliverable-scale
 run; several hours on this 1-core container, minutes on real hardware).
 
   PYTHONPATH=src python examples/train_e2e.py
+  PYTHONPATH=src python examples/train_e2e.py --schedule 1f1b-i --pp 2
   PYTHONPATH=src python examples/train_e2e.py --full
 """
 import argparse
@@ -16,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
-from repro.core.schedule import build
+from repro.core.schedule import SCHEDULES, build
 from repro.data import DataConfig, make_batches, microbatches
 from repro.models import model as M
 from repro.optim import OptConfig, adamw_init, adamw_update
@@ -26,6 +31,8 @@ from repro.pipeline.reference import pipeline_grads
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--schedule", default="stp", choices=SCHEDULES)
+    ap.add_argument("--pp", type=int, default=2)
     ap.add_argument("--ckpt", default="/tmp/repro_e2e_ckpt")
     args = ap.parse_args()
 
@@ -37,16 +44,25 @@ def main():
         cfg = get_config("qwen3-4b").reduced(
             n_layers=4, d_model=128, n_heads=4, vocab=512)
         steps, seq, batch, m = 30, 64, 8, 4
+    if args.schedule == "1f1b-i" and m % args.pp:
+        # 1F1B-I needs m % p == 0; keep batch % m == 0 while adjusting.
+        cands = [k for k in range(args.pp, batch + 1, args.pp)
+                 if batch % k == 0]
+        if not cands:
+            raise SystemExit(
+                f"1f1b-i with pp={args.pp}: no microbatch count that is a "
+                f"multiple of pp and divides global batch {batch}")
+        m = min(cands, key=lambda k: abs(k - m))
     n_params = sum(x.size for x in jax.tree.leaves(
         M.init_params(jax.random.PRNGKey(0), cfg)))
     print(f"training {cfg.name}: {n_params / 1e6:.1f}M params, "
-          f"{steps} steps, STP schedule p=2 m={m}")
+          f"{steps} steps, {args.schedule} schedule p={args.pp} m={m}")
 
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     oc = OptConfig(lr=3e-3, warmup_steps=max(2, steps // 20),
                    total_steps=steps)
     opt = adamw_init(params)
-    tables, pl = build("stp", 2, m)
+    tables, pl = build(args.schedule, args.pp, m)
     dc = DataConfig(seq_len=seq, global_batch=batch)
 
     losses = []

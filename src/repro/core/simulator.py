@@ -135,6 +135,28 @@ class Instr:
             yield ("W", *self.w)
 
 
+def instr_dep_keys(instr: Instr, n_vs: int):
+    """Cross-instruction dependencies of one instruction — the single
+    source of the IR dataflow rule, shared by the static verifier and the
+    slot lowering: F needs the upstream F; B needs the downstream B (or its
+    own F at the loss stage, unless self-braided); a W with a foreign tape
+    needs that tape's B.  Yields ((phase, vs, mb), tag) with tag ``"tape"``
+    for the W entry (same-device, so consumers may relax its slot timing)
+    and ``"flow"`` otherwise."""
+    if instr.f is not None:
+        vs, mb = instr.f
+        if vs > 0:
+            yield ("F", vs - 1, mb), "flow"
+    if instr.b is not None:
+        vs, mb = instr.b
+        if vs < n_vs - 1:
+            yield ("B", vs + 1, mb), "flow"
+        elif instr.f != (vs, mb):           # loss vs: needs own F
+            yield ("F", vs, mb), "flow"     # (self-braid F&B carries it)
+    if instr.w is not None and instr.w != instr.b:   # own-B W is in-instr
+        yield ("B", *instr.w), "tape"
+
+
 def duration(instr: Instr, t: StageTimes) -> tuple[float, float]:
     """Returns (total duration, exposed TP communication within it)."""
     d = 0.0
@@ -316,6 +338,121 @@ def simulate(schedule: Sequence[Sequence[Instr]], pl: Placement,
     return SimResult(total_time=float(free.max()), busy=busy,
                      tp_exposed=tp_exposed, peak_mem=peak, finish=finish,
                      trace=trace, p=pl.p, m=m)
+
+
+# ---------------------------------------------------------------------------
+# Static IR verification: the lowering contract the executors rely on.
+# ---------------------------------------------------------------------------
+
+class ScheduleVerificationError(AssertionError):
+    """A schedule table violates the instruction-IR safety contract."""
+
+
+def verify_tables(schedule: Sequence[Sequence[Instr]], pl: Placement, m: int,
+                  *, mem_bound: Optional[float] = None,
+                  m_a: Optional[np.ndarray] = None) -> np.ndarray:
+    """Statically verify a per-device instruction table as an IR program.
+
+    Checks, without any timing model (pure dependency replay):
+
+      * completeness/uniqueness — every (phase, vs, mb) appears exactly once,
+        on the device that owns ``vs``;
+      * dependency safety — a global in-order replay of the per-device
+        streams never deadlocks: each F's upstream activation, each B's
+        downstream gradient (or own F at the loss stage) and each W's tape
+        exist when the instruction dispatches;
+      * memory safety — no double-free: a B releases its activation exactly
+        once and a W consumes its tape exactly once (``BW``-style fused
+        instructions consume inline); nothing is left allocated at the end;
+      * memory bound — per-device peak in-flight activation memory (in
+        ``m_a`` units, default 1 per virtual stage) stays <= ``mem_bound``.
+
+    Returns the per-device peak in-flight activation memory.
+    """
+    n_dev, n_vs = pl.p, pl.n_vs
+    if m_a is None:
+        m_a = np.ones(n_vs)
+    seen: dict = {}
+    for d, tab in enumerate(schedule):
+        for i, ins in enumerate(tab):
+            for ph, vs, mb in ins.components():
+                key = (ph, vs, mb)
+                if key in seen:
+                    raise ScheduleVerificationError(
+                        f"duplicate op {key}: device {seen[key][0]} "
+                        f"instr {seen[key][1]} and device {d} instr {i}")
+                if not (0 <= vs < n_vs and 0 <= mb < m):
+                    raise ScheduleVerificationError(f"out-of-range op {key}")
+                if pl.device(vs) != d:
+                    raise ScheduleVerificationError(
+                        f"{key} scheduled on device {d}, "
+                        f"owner is {pl.device(vs)}")
+                seen[key] = (d, i)
+    expect = 3 * n_vs * m
+    if len(seen) != expect:
+        missing = {(ph, vs, mb) for ph in "FBW" for vs in range(n_vs)
+                   for mb in range(m)} - set(seen)
+        raise ScheduleVerificationError(
+            f"incomplete schedule: {len(seen)}/{expect} ops; "
+            f"missing e.g. {sorted(missing)[:8]}")
+
+    done: set = set()            # (phase, vs, mb) replayed
+    tapes: set = set()           # (vs, mb) with a live weight tape
+    acts: set = set()            # (vs, mb) with a live activation
+    mem = np.zeros(n_dev)
+    peak = np.zeros(n_dev)
+    ptr = [0] * n_dev
+
+    def deps_ok(ins: Instr) -> bool:
+        return all(key in done for key, _ in instr_dep_keys(ins, n_vs))
+
+    remaining = sum(len(t) for t in schedule)
+    while remaining:
+        progressed = False
+        for d in range(n_dev):
+            if ptr[d] >= len(schedule[d]):
+                continue
+            ins = schedule[d][ptr[d]]
+            if not deps_ok(ins):
+                continue
+            if ins.f is not None:
+                vs, mb = ins.f
+                done.add(("F", vs, mb))
+                acts.add((vs, mb))
+                mem[d] += m_a[vs]
+                peak[d] = max(peak[d], mem[d])
+            if ins.b is not None:
+                vs, mb = ins.b
+                if (vs, mb) not in acts:
+                    raise ScheduleVerificationError(
+                        f"double-free: B({vs},{mb}) has no live activation")
+                acts.discard((vs, mb))
+                mem[d] -= m_a[vs]
+                done.add(("B", vs, mb))
+                tapes.add((vs, mb))
+            if ins.w is not None:
+                if ins.w not in tapes:
+                    raise ScheduleVerificationError(
+                        f"double-free: W{ins.w} has no live weight tape")
+                tapes.discard(ins.w)
+                done.add(("W", *ins.w))
+            ptr[d] += 1
+            remaining -= 1
+            progressed = True
+        if not progressed:
+            heads = [schedule[d][ptr[d]] if ptr[d] < len(schedule[d])
+                     else None for d in range(n_dev)]
+            raise ScheduleVerificationError(
+                f"dependency deadlock; per-device heads: {heads}")
+    if tapes or acts:
+        raise ScheduleVerificationError(
+            f"leak at end of schedule: live tapes {sorted(tapes)[:8]}, "
+            f"live activations {sorted(acts)[:8]}")
+    if mem_bound is not None and peak.max() > mem_bound + 1e-9:
+        raise ScheduleVerificationError(
+            f"peak in-flight activation memory {peak.max():.2f} exceeds "
+            f"bound {mem_bound:.2f} (per device: {peak.tolist()})")
+    return peak
 
 
 # ---------------------------------------------------------------------------

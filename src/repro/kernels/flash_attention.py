@@ -27,6 +27,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 NEG_INF = -1e30
 
 
@@ -125,7 +129,7 @@ def flash_attention_fwd(q, k, v, causal: bool = True,
             pltpu.VMEM((qb,), jnp.float32),       # running sum l
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(qp, kp, vp)
     return out[:, :S]

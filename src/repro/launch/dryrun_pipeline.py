@@ -1,14 +1,16 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
 
-"""Pipeline-runtime dry-run: lower + compile the STP shard_map executor —
-the braided F/B/W instruction streams, ppermute stage exchanges and TP
-collectives — on a production (data, stage, model) mesh.  Proves the
-``stage`` axis of the paper's runtime shards (the train_step dry-run covers
-the (data, model) axes).
+"""Pipeline-runtime dry-run: lower + compile the shard_map executor for any
+schedule kind — the braided F/B/W instruction streams, ppermute stage
+exchanges and TP collectives — on a production (data, stage, model) mesh.
+Proves the ``stage`` axis of the paper's runtime shards (the train_step
+dry-run covers the (data, model) axes).
 
   PYTHONPATH=src python -m repro.launch.dryrun_pipeline \
       --arch stablelm-3b --pp 4 --tp 4 --microbatches 8
+  PYTHONPATH=src python -m repro.launch.dryrun_pipeline \
+      --arch stablelm-3b --schedule 1f1b --pp 8 --tp 2
 """
 import argparse
 import json
@@ -40,15 +42,15 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    assert cfg.n_layers % (2 * args.pp) == 0, \
-        f"{cfg.name}: n_layers {cfg.n_layers} % 2*pp != 0"
     mesh = jax.make_mesh((args.data, args.pp, args.tp),
                          ("data", "stage", "model"))
     tables, pl = build_schedule(args.schedule, args.pp, args.microbatches)
+    assert cfg.n_layers % pl.n_vs == 0, \
+        f"{cfg.name}: n_layers {cfg.n_layers} % n_vs ({pl.n_vs}) != 0"
 
     def init_sds():
         p = M.init_params(jax.random.PRNGKey(0), cfg)
-        c0, c1, _ = stack_stage_params(p, cfg, args.pp)
+        c0, c1, _ = stack_stage_params(p, cfg, args.pp, kind=pl.kind)
         return c0, c1, p["embed"], p["head"]
 
     c0, c1, embed_p, head_p = jax.eval_shape(init_sds)

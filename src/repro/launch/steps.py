@@ -22,6 +22,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.schedule import build as build_schedule, memory_bound
+from repro.core.simulator import verify_tables
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.optim.adamw import OptConfig, adamw_update
@@ -99,6 +101,40 @@ def make_serve_step(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
         return M.decode_step(pc, caches, batch, pos, cfg, tp=tp)
 
     return serve
+
+
+def make_pipeline_grads_fn(cfg: ModelConfig, kind: str, p: int, m: int,
+                           mb_shape, mesh, params, *,
+                           model_axis: Optional[str] = None):
+    """Lower schedule ``kind`` through the full pipeline stack — table ->
+    verified instruction IR -> slot grid -> shard_map runtime — and return
+    ``grads_fn(params, tokens, labels) -> (loss, grads)`` operating on
+    *canonical* (unstacked) params/grads, ready for ``adamw_update``.
+
+    Any of the six ``repro.core.schedule.SCHEDULES`` works; ``mesh`` must
+    carry a ``stage`` axis of size ``p`` (plus ``model_axis`` for TP).
+    ``tokens``/``labels`` are the stacked microbatches, shape
+    (m, mb_batch[, seq...]).
+    """
+    from repro.pipeline.spmd import (build_pipeline_step, stack_stage_params,
+                                     unstack_stage_grads)
+
+    tables, pl = build_schedule(kind, p, m)
+    verify_tables(tables, pl, m, mem_bound=memory_bound(kind, p, m))
+    c0, c1, lvs = stack_stage_params(params, cfg, p, kind=pl.kind)
+    step = build_pipeline_step(cfg, tables, pl, mesh, m, mb_shape,
+                               (c0, c1, params["embed"], params["head"]),
+                               model_axis=model_axis)
+
+    def grads_fn(params, tokens, labels):
+        c0, c1, _ = stack_stage_params(params, cfg, p, kind=pl.kind)
+        with mesh:
+            loss, g0, g1, ge, gh = step(c0, c1, params["embed"],
+                                        params["head"], tokens, labels)
+        blocks = unstack_stage_grads(g0, g1, cfg, p, lvs, kind=pl.kind)
+        return loss, {"embed": ge, "blocks": blocks, "head": gh}
+
+    return grads_fn, pl
 
 
 # ---------------------------------------------------------------------------

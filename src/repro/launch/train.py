@@ -4,15 +4,21 @@ Two runtimes share the model/optimizer/data substrates:
 
   * ``pjit``     — data(+tensor)-parallel jit train_step (the dry-run's
                    step, executed for real at reduced scale on CPU).
-  * ``pipeline`` — the paper's STP braided schedule on a (stage[, model])
-                   mesh via the shard_map executor, or the single-process
-                   reference executor when only one device exists.
+  * ``pipeline`` — any of the six schedules through the single-process
+                   reference executor (numerics oracle; one device).
+  * ``spmd``     — any of the six schedules through the shard_map runtime
+                   on a real (stage[, model]) mesh; needs pp * tp devices
+                   (use XLA_FLAGS=--xla_force_host_platform_device_count=N
+                   for fake CPU devices).
 
 Usage (CPU example scale):
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
       --steps 50 --runtime pjit --seq 128 --batch 8
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
       --runtime pipeline --schedule stp --pp 2 --microbatches 4
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+      --runtime spmd --schedule 1f1b --pp 4 --microbatches 4
 """
 from __future__ import annotations
 
@@ -26,7 +32,7 @@ import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import get_config
-from repro.core.schedule import build as build_schedule
+from repro.core.schedule import SCHEDULES, build as build_schedule
 from repro.data import DataConfig, make_batches, microbatches
 from repro.models import model as M
 from repro.optim import OptConfig, adamw_init, adamw_update
@@ -44,10 +50,12 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--runtime", choices=("pjit", "pipeline"),
+    ap.add_argument("--runtime", choices=("pjit", "pipeline", "spmd"),
                     default="pjit")
-    ap.add_argument("--schedule", default="stp")
+    ap.add_argument("--schedule", default="stp", choices=SCHEDULES)
     ap.add_argument("--pp", type=int, default=2)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="model-axis size for the spmd runtime")
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=5)
@@ -98,6 +106,40 @@ def main():
                   "blocks": M.unstack_blocks(params_s["blocks"], period),
                   "head": params_s["head"]}
         opt_state = opt_s
+    elif args.runtime == "spmd":
+        from jax.sharding import Mesh
+        from repro.launch.steps import make_pipeline_grads_fn
+
+        ndev = len(jax.devices())
+        if args.pp * args.tp != ndev:
+            raise SystemExit(
+                f"spmd runtime needs pp*tp == device count "
+                f"(pp={args.pp}, tp={args.tp}, devices={ndev}); set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+        mesh = Mesh(np.array(jax.devices()).reshape(args.pp, args.tp),
+                    ("stage", "model"))
+        mbb = dc.global_batch // args.microbatches
+        grads_fn, pl = make_pipeline_grads_fn(
+            cfg, args.schedule, args.pp, args.microbatches,
+            (mbb, dc.seq_len), mesh, params,
+            model_axis="model" if args.tp > 1 else None)
+        t0 = time.time()
+        for i, batch in enumerate(make_batches(cfg, dc, args.steps)):
+            mbs = microbatches({k: jnp.asarray(v) for k, v in batch.items()},
+                               args.microbatches)
+            tokens = jnp.stack([b["tokens" if cfg.frontend == "text"
+                                  else "embeds"] for b in mbs])
+            labels = jnp.stack([b["labels"] for b in mbs])
+            loss, grads = grads_fn(params, tokens, labels)
+            params, opt_state, gn = adamw_update(params, grads, opt_state,
+                                                 oc)
+            if (i + start) % args.log_every == 0:
+                tok_s = dc.global_batch * dc.seq_len * (i + 1) \
+                    / max(time.time() - t0, 1e-9)
+                print(f"step {i + start:5d} loss {float(loss):.4f} "
+                      f"gnorm {float(gn):.3f} tok/s {tok_s:,.0f} "
+                      f"[spmd {args.schedule} {pl.kind} p={args.pp} "
+                      f"tp={args.tp} m={args.microbatches}]", flush=True)
     else:
         tables, pl = build_schedule(args.schedule, args.pp,
                                     args.microbatches)

@@ -2,9 +2,13 @@
 
 * ``reference`` — single-process executor that replays any schedule table
   with the real per-unit F/B/W math (any architecture, braiding semantics,
-  V-shape routing).  Numerics oracle: grads must equal ``jax.grad``.
+  any placement routing).  Numerics oracle: grads must equal ``jax.grad``.
+* ``slots`` — placement-generic lowering of verified instruction tables to
+  lockstep slot grids + ``lax.switch`` branch codes (flat / parallel /
+  vshape wiring).
 * ``spmd`` — shard_map executor over a real ``stage`` mesh axis with
   ``ppermute`` stage communication; one scanned SPMD program executes the
-  per-device instruction streams in lockstep slots.
+  per-device instruction streams of any of the six schedule kinds in
+  lockstep slots.
 """
 from repro.pipeline.reference import pipeline_grads, reference_grads

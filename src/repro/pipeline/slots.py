@@ -1,26 +1,99 @@
-"""Lockstep-slot conversion of schedule tables.
+"""Lockstep-slot conversion + placement-generic branch encoding.
 
 The event-driven schedule is asynchronous; the SPMD executor runs one
 instruction per device per *slot* with a ``ppermute`` exchange at every slot
 boundary.  ``to_slots`` assigns each instruction its wavefront level —
 max(own device's previous slot, every dependency's slot) + 1 — which
 preserves program order and guarantees all cross-device inputs arrived in an
-earlier slot's exchange.
+earlier slot's exchange.  This lowering is placement-independent: every
+cross-stage hop (including the parallel placement's chunk-0 -> chunk-1
+wrap-around from the last device back to device 0) is a single neighbour
+exchange on the stage ring.
+
+``encode`` then maps each instruction component to a *branch role* — which
+``lax.switch`` arm the executor must run for it.  The role tables differ per
+placement because the embed, loss-head and chunk-turn stages land on
+different devices:
+
+  flat      v=1: embed on device 0, loss head on device p-1; activations
+            flow +1, gradients -1.  Chunk 1 does not exist.
+  parallel  v=2 (1F1B-I): chunk c stage s on device s; both chunks'
+            activations flow +1 *with wrap-around* (vs p-1 on device p-1
+            hands off to vs p on device 0), gradients -1 with wrap.
+  vshape    v=2 (ZB-V / STP): chunk 0 ascends, chunk 1 descends; the turn
+            and the loss head are device-local writes on devices p-1 / 0.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.simulator import Instr, Placement
+from repro.core.simulator import Instr, Placement, instr_dep_keys
 
-NOP = Instr("W", w=None)  # placeholder; encoded as all-zero codes
+# Branch-role vocabularies per placement kind.  Index in the tuple == the
+# int32 code emitted by ``encode`` == the ``lax.switch`` arm the executor
+# builds for that role (role "*_nop" is always code 0).
+F_BRANCHES = {
+    "flat": ("f_nop", "f0", "f0_embed", "f0_loss"),
+    "parallel": ("f_nop", "f0", "f0_embed", "f0_send1", "f1", "f1_loss"),
+    "vshape": ("f_nop", "f0", "f0_embed", "f0_turn", "f1", "f1_loss"),
+}
+B_BRANCHES = {
+    "flat": ("b_nop", "b0", "b0_embed", "b0_loss"),
+    "parallel": ("b_nop", "b0", "b0_embed", "b1", "b1_send0", "b1_loss"),
+    "vshape": ("b_nop", "b0", "b0_embed", "b1", "b1_turn", "b1_loss"),
+}
+W_BRANCHES = {
+    "flat": ("w_nop", "w0", "w0_head"),
+    "parallel": ("w_nop", "w0", "w1", "w1_head"),
+    "vshape": ("w_nop", "w0", "w1", "w1_head"),
+}
 
-# f codes
-F_NOP, F0, F0_EMBED, F0_TURN, F1, F1_LOSS = range(6)
-# b codes
-B_NOP, B0, B0_EMBED, B1, B1_TURN, B1_LOSS = range(6)
-# w codes
-W_NOP, W0, W1, W1_HEAD = range(4)
+# Stream wiring: which of the four boundary streams (x0/x1 activations,
+# g0/g1 gradients, by *destination* buffer) ride the +1 ("up") vs the -1
+# ("dn") exchange, and whether the ring wraps.
+WIRING = {
+    "flat": dict(up=("x0",), dn=("g0",), wrap=False),
+    "parallel": dict(up=("x0", "x1"), dn=("g0", "g1"), wrap=True),
+    "vshape": dict(up=("x0", "g1"), dn=("x1", "g0"), wrap=False),
+}
+
+
+def f_role(pl: Placement, vs: int, d: int) -> str:
+    p = pl.p
+    if pl.kind == "flat":
+        if d == 0:
+            return "f0_embed"
+        return "f0_loss" if d == p - 1 else "f0"
+    if pl.chunk(vs) == 0:
+        if d == 0:
+            return "f0_embed"
+        if vs == p - 1:  # last chunk-0 stage: output enters chunk 1
+            return "f0_turn" if pl.kind == "vshape" else "f0_send1"
+        return "f0"
+    return "f1_loss" if vs == pl.n_vs - 1 else "f1"
+
+
+def b_role(pl: Placement, vs: int, d: int) -> str:
+    p = pl.p
+    if pl.kind == "flat":
+        if d == p - 1:
+            return "b0_loss"
+        return "b0_embed" if d == 0 else "b0"
+    if pl.chunk(vs) == 0:
+        return "b0_embed" if d == 0 else "b0"
+    if vs == pl.n_vs - 1:
+        return "b1_loss"
+    if vs == p:          # lowest chunk-1 stage: gradient enters chunk 0
+        return "b1_turn" if pl.kind == "vshape" else "b1_send0"
+    return "b1"
+
+
+def w_role(pl: Placement, vs: int, d: int) -> str:
+    if pl.kind == "flat":
+        return "w0_head" if d == pl.p - 1 else "w0"
+    if pl.chunk(vs) == 0:
+        return "w0"
+    return "w1_head" if vs == pl.n_vs - 1 else "w1"
 
 
 def to_slots(tables, pl: Placement):
@@ -39,36 +112,13 @@ def to_slots(tables, pl: Placement):
             ins = tables[d][ptr[d]]
             deps = []
             ok = True
-            if ins.f is not None:
-                vs, mb = ins.f
-                if vs > 0:
-                    key = ("F", vs - 1, mb)
-                    if key not in level:
-                        ok = False
-                    else:
-                        deps.append(level[key])
-            if ok and ins.b is not None:
-                vs, mb = ins.b
-                if vs < n_vs - 1:
-                    key = ("B", vs + 1, mb)
-                    if key not in level:
-                        ok = False
-                    else:
-                        deps.append(level[key])
-                elif ins.f != (vs, mb):
-                    key = ("F", vs, mb)
-                    if key not in level:
-                        ok = False
-                    else:
-                        deps.append(level[key])
-            if ok and ins.w is not None and ins.w != ins.b:
-                key = ("B", *ins.w)
+            for key, tag in instr_dep_keys(ins, n_vs):
                 if key not in level:
                     ok = False
-                else:
-                    # W consumes a locally-stored tape: no +1 needed, but
-                    # program order already enforces it on this device.
-                    deps.append(level[key] - 1)
+                    break
+                # a "tape" dep is a locally-stored W input: program order on
+                # this device already sequences it, so same-slot is legal.
+                deps.append(level[key] - (1 if tag == "tape" else 0))
             if not ok:
                 continue
             slot = max([dev_level[d]] + [x for x in deps]) + 1
@@ -91,42 +141,24 @@ def to_slots(tables, pl: Placement):
 
 def encode(grid, pl: Placement) -> np.ndarray:
     """-> int32 codes of shape (n_slots, p, 6):
-    [f_code, f_mb, b_code, b_mb, w_code, w_mb]."""
+    [f_code, f_mb, b_code, b_mb, w_code, w_mb], indices into the
+    placement's F_BRANCHES / B_BRANCHES / W_BRANCHES vocabularies."""
     p = pl.p
+    fb, bb, wb = F_BRANCHES[pl.kind], B_BRANCHES[pl.kind], W_BRANCHES[pl.kind]
     n_slots = len(grid[0])
     codes = np.zeros((n_slots, p, 6), np.int32)
-
-    def fc(vs, d):
-        if pl.chunk(vs) == 0:
-            if d == 0:
-                return F0_EMBED
-            return F0_TURN if d == p - 1 else F0
-        return F1_LOSS if d == 0 else F1
-
-    def bc(vs, d):
-        if pl.chunk(vs) == 0:
-            return B0_EMBED if d == 0 else B0
-        if d == 0:
-            return B1_LOSS
-        return B1_TURN if d == p - 1 else B1
-
-    def wc(vs, d):
-        if pl.chunk(vs) == 0:
-            return W0
-        return W1_HEAD if d == 0 else W1
-
     for d in range(p):
         for t, ins in enumerate(grid[d]):
             if ins is None:
                 continue
             if ins.f is not None:
-                codes[t, d, 0] = fc(ins.f[0], d)
+                codes[t, d, 0] = fb.index(f_role(pl, ins.f[0], d))
                 codes[t, d, 1] = ins.f[1]
             if ins.b is not None:
-                codes[t, d, 2] = bc(ins.b[0], d)
+                codes[t, d, 2] = bb.index(b_role(pl, ins.b[0], d))
                 codes[t, d, 3] = ins.b[1]
             if ins.w is not None:
-                codes[t, d, 4] = wc(ins.w[0], d)
+                codes[t, d, 4] = wb.index(w_role(pl, ins.w[0], d))
                 codes[t, d, 5] = ins.w[1]
-    # special case p-1 == 0 cannot happen (p >= 2 enforced by caller)
+    # p == 1 cannot happen (p >= 2 enforced by caller)
     return codes

@@ -7,14 +7,22 @@ slots.  Per slot each device
      a braided F&B block is simply a slot whose F- and B-parts are both
      active — inside one jitted slot their computations are data-independent,
      which is precisely the legal-overlap window the paper engineers),
-  2. exchanges boundary tensors with its neighbours via two ``ppermute``s:
-     shift +1 carries chunk-0 activations and chunk-1 gradients (the "V"
-     down-sweep), shift −1 carries chunk-1 activations and chunk-0 gradients.
+  2. exchanges boundary tensors with its neighbours via two ``ppermute``s
+     whose wiring depends on the placement (``pipeline.slots.WIRING``):
 
-Scope: V-shape placements (the paper's schedule family), uniform layer
-stacks (``n_layers % 2p == 0``), TP optionally composed via a ``model`` mesh
-axis.  Heterogeneous architectures run through ``pipeline.reference`` and the
-pjit path.
+     flat      shift +1 carries activations, shift -1 gradients;
+     parallel  both chunks' activations ride +1 and gradients -1 on a
+               *wrapped* stage ring (the chunk-0 -> chunk-1 hand-off goes
+               from device p-1 back to device 0);
+     vshape    shift +1 carries chunk-0 activations and chunk-1 gradients
+               (the "V" down-sweep), shift -1 carries chunk-1 activations
+               and chunk-0 gradients; turn and loss are device-local.
+
+All six schedule kinds in ``repro.core.schedule.SCHEDULES`` lower through
+this one runtime: table -> verified instruction IR -> slot grid -> scanned
+shard_map program.  Uniform layer stacks are required
+(``n_layers % (v * p) == 0``); TP optionally composes via a ``model`` mesh
+axis.  Heterogeneous architectures run through ``pipeline.reference``.
 """
 from __future__ import annotations
 
@@ -27,40 +35,64 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.simulator import Placement
+from repro.core.simulator import Placement, flat, parallel, vshape
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.pipeline import slots as SL
 from repro.tp.context import TPContext
 
+_PLACEMENTS = {"flat": flat, "parallel": parallel, "vshape": vshape}
 
-def stack_stage_params(params, cfg: ModelConfig, p: int):
-    """Canonical params -> (chunk0, chunk1) stacked with leading (p, L_vs)
-    dims + embed/head.  chunk0 vs s = device s; chunk1 vs 2p-1-s = device s,
-    i.e. chunk1 stages are stacked in *device* order (reversed vs order)."""
+
+def stages_per_chunk(cfg: ModelConfig, p: int, kind: str = "vshape") -> int:
+    """Layers per virtual stage (the placement carries the chunk count)."""
+    n_vs = _PLACEMENTS[kind](p).n_vs
     n = cfg.n_layers
-    assert n % (2 * p) == 0, f"SPMD executor needs n_layers % 2p == 0 ({n}, {p})"
-    lvs = n // (2 * p)
+    assert n % n_vs == 0, \
+        f"SPMD executor needs n_layers % n_vs == 0 (n={n}, n_vs={n_vs})"
+    return n // n_vs
+
+
+def stack_stage_params(params, cfg: ModelConfig, p: int,
+                       kind: str = "vshape"):
+    """Canonical params -> (chunk0, chunk1) stacked with leading (p, L_vs)
+    dims + embed/head.  Stacking is in *device* order per chunk:
+
+      flat      chunk0 vs s = device s; chunk1 empty ({}).
+      parallel  chunk0 vs s = device s; chunk1 vs p+s = device s.
+      vshape    chunk0 vs s = device s; chunk1 vs 2p-1-s = device s
+                (i.e. chunk1 stages stacked in reversed vs order).
+    """
+    lvs = stages_per_chunk(cfg, p, kind)
     blocks = params["blocks"]
 
     def stack(layers):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
 
-    c0 = stack([stack(blocks[s * lvs:(s + 1) * lvs]) for s in range(p)])
-    # device s hosts vs 2p-1-s -> layers [(2p-1-s)*lvs : (2p-s)*lvs]
-    c1 = stack([stack(blocks[(2 * p - 1 - s) * lvs:(2 * p - s) * lvs])
-                for s in range(p)])
-    return c0, c1, lvs
+    def chunk_of(vs_of_dev):
+        return stack([stack(blocks[vs_of_dev(s) * lvs:
+                                   (vs_of_dev(s) + 1) * lvs])
+                      for s in range(p)])
+
+    c0 = chunk_of(lambda s: s)
+    if kind == "flat":
+        return c0, {}, lvs
+    if kind == "parallel":
+        return c0, chunk_of(lambda s: p + s), lvs
+    return c0, chunk_of(lambda s: 2 * p - 1 - s), lvs
 
 
-def unstack_stage_grads(g0, g1, cfg: ModelConfig, p: int, lvs: int):
+def unstack_stage_grads(g0, g1, cfg: ModelConfig, p: int, lvs: int,
+                        kind: str = "vshape"):
     """Inverse of ``stack_stage_params`` for the gradient pytrees."""
     blocks = [None] * cfg.n_layers
     for s in range(p):
         for i in range(lvs):
             blocks[s * lvs + i] = jax.tree.map(lambda x: x[s, i], g0)
-            blocks[(2 * p - 1 - s) * lvs + i] = jax.tree.map(
-                lambda x: x[s, i], g1)
+            if kind == "flat":
+                continue
+            vs1 = (p + s) if kind == "parallel" else (2 * p - 1 - s)
+            blocks[vs1 * lvs + i] = jax.tree.map(lambda x: x[s, i], g1)
     return blocks
 
 
@@ -116,11 +148,6 @@ def tp_specs(tree, model_axis: Optional[str], stage_axis: Optional[str],
     return jax.tree_util.tree_map_with_path(one, tree)
 
 
-def _stackm(tree, m):
-    return jax.tree.map(
-        lambda x: jnp.zeros((m,) + x.shape, x.dtype), tree)
-
-
 def _read(buf, mb):
     return jax.tree.map(
         lambda a: jax.lax.dynamic_index_in_dim(a, mb, 0, keepdims=False), buf)
@@ -156,19 +183,27 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     """Returns a jitted SPMD function
     ``step(c0, c1, embed_p, head_p, tokens, labels) -> (loss, g0, g1,
     g_embed, g_head)`` executing the schedule over the ``stage`` (and
-    optionally ``model``) mesh axes.
+    optionally ``model``) mesh axes, for any placement kind
+    (flat / parallel / vshape).
 
     mb_shape: (mb_batch, seq) of one microbatch.
     param_trees: (c0, c1, embed_p, head_p) — global (unsharded) pytrees or
     ShapeDtypeStructs; used to derive shard specs and local buffer shapes.
+    For flat placements c1 is the empty pytree ``{}``.
     """
     p = pl.p
+    two_chunks = pl.kind != "flat"
     grid = SL.to_slots(tables, pl)
     codes = jnp.asarray(SL.encode(grid, pl))            # (L, p, 6)
+    wiring = SL.WIRING[pl.kind]
+    act_streams = tuple(s for s in ("x0", "x1")
+                        if s in wiring["up"] + wiring["dn"])
+    grad_streams = tuple(s for s in ("g0", "g1")
+                         if s in wiring["up"] + wiring["dn"])
     tp = TPContext(axis=model_axis,
                    size=(mesh.shape[model_axis] if model_axis else 1))
-    specs0 = cfg.layers[:cfg.n_layers // (2 * p)]       # uniform stacks
-    specs1 = specs0
+    lvs = stages_per_chunk(cfg, p, pl.kind)
+    specs0 = cfg.layers[:lvs]                           # uniform stacks
     bmb, seq = mb_shape
     d_model = cfg.d_model
     scale = 1.0 / m
@@ -176,12 +211,12 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
 
     def chunk_f(cparams, x, tpc=tp):
         layers = [jax.tree.map(lambda a: a[i], cparams)
-                  for i in range(len(specs0))]
+                  for i in range(lvs)]
         return M.chunk_fwd(layers, tpc, x, rope, specs0, cfg)
 
     def chunk_b(cparams, ctxs, gy, tpc=tp):
         layers = [jax.tree.map(lambda a: a[i], cparams)
-                  for i in range(len(specs0))]
+                  for i in range(lvs)]
         return M.chunk_bwd_act(layers, tpc, ctxs, gy, specs0, cfg)
 
     def chunk_w(tapes):
@@ -189,9 +224,6 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
 
     # --- trace shapes for context/tape buffers --------------------------
     x_sds = jax.ShapeDtypeStruct((bmb, seq, d_model), jnp.float32)
-    tok_sds = (jax.ShapeDtypeStruct((bmb, seq), jnp.int32)
-               if cfg.frontend == "text"
-               else jax.ShapeDtypeStruct((bmb, seq, d_model), jnp.float32))
     lab_sds = jax.ShapeDtypeStruct((bmb, seq), jnp.int32)
 
     # Buffer shapes are traced with an identity TPContext over the *local*
@@ -218,22 +250,25 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
 
     def run(c0, c1, embed_p, head_p, tokens, labels):
         """Per-device body (inside shard_map).  c0/c1 carry a leading
-        stage dim of 1."""
+        stage dim of 1 (c1 is the empty pytree for flat placements)."""
         c0 = jax.tree.map(lambda a: a[0], c0)
         c1 = jax.tree.map(lambda a: a[0], c1)
+        zrow = lambda: jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32)
         carry = {
-            "x0": jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32),
-            "x1": jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32),
-            "g0": jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32),
-            "g1": jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32),
-            "ctx0": zeros_of(ctx_sds, m), "ctx1": zeros_of(ctx_sds, m),
-            "tape0": zeros_of(tape_sds, m), "tape1": zeros_of(tape_sds, m),
+            "x0": zrow(), "g0": zrow(),
+            "ctx0": zeros_of(ctx_sds, m), "tape0": zeros_of(tape_sds, m),
             "hctx": zeros_of(hctx_sds, m), "htape": zeros_of(htape_sds, m),
             "loss": jnp.zeros((m,), jnp.float32),
-            "a0": _zeros_like_tree(c0), "a1": _zeros_like_tree(c1),
+            "a0": _zeros_like_tree(c0),
             "ae": _zeros_like_tree(embed_p),
             "ah": _zeros_like_tree(head_p),
         }
+        if two_chunks:
+            carry.update({
+                "x1": zrow(), "g1": zrow(),
+                "ctx1": zeros_of(ctx_sds, m), "tape1": zeros_of(tape_sds, m),
+                "a1": _zeros_like_tree(c1),
+            })
 
         def add_partial(acc, new, s=scale):
             if isinstance(new, dict):
@@ -254,55 +289,79 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                 return out
             return acc.at[i].add(s * new.astype(acc.dtype))
 
+        zx = lambda: jnp.zeros((bmb, seq, d_model), jnp.float32)
+
+        def acts_out(**valid):
+            """Per-act-stream (payload, flag) tuple, invalid by default."""
+            return tuple(valid.get(s, (zx(), jnp.int32(0)))
+                         for s in act_streams)
+
+        def grads_out(**valid):
+            return tuple(valid.get(s, (zx(), jnp.int32(0)))
+                         for s in grad_streams)
+
+        def _head_f(carry, mb, y):
+            loss, hctx = M.head_fwd(head_p, tp, y, _read(labels, mb), cfg)
+            return dict(carry,
+                        hctx=_write(carry["hctx"], mb, hctx),
+                        loss=carry["loss"].at[mb].set(loss))
+
+        def _head_b(carry, mb):
+            gy, htape, hjoint = M.head_bwd_act(
+                head_p, tp, _read(carry["hctx"], mb), jnp.float32(1.0), cfg)
+            carry = dict(carry,
+                         htape=_write(carry["htape"], mb, htape),
+                         ah=add_partial(carry["ah"], hjoint))
+            return carry, gy
+
         # ---- F branches -------------------------------------------------
         def f_nop(carry, mb):
-            z = jnp.zeros((bmb, seq, d_model), jnp.float32)
-            return carry, z, jnp.int32(0), z, jnp.int32(0)
+            return carry, acts_out()
 
-        def _f_chunk0(carry, mb, src):
-            y, ctxs = chunk_f(c0, src)
-            carry = dict(carry, ctx0=_write(carry["ctx0"], mb, ctxs))
+        def _f_chunk(carry, mb, which, src):
+            cp, ck = (c0, "ctx0") if which == 0 else (c1, "ctx1")
+            y, ctxs = chunk_f(cp, src)
+            carry = dict(carry, **{ck: _write(carry[ck], mb, ctxs)})
             return carry, y
 
         def f0(carry, mb):
-            carry, y = _f_chunk0(carry, mb, _read(carry["x0"], mb))
-            z = jnp.zeros_like(y)
-            return carry, y, jnp.int32(1), z, jnp.int32(0)
+            carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
+            return carry, acts_out(x0=(y, jnp.int32(1)))
 
         def f0_embed(carry, mb):
             batch = ({"tokens": _read(tokens, mb)} if cfg.frontend == "text"
                      else {"embeds": _read(tokens, mb)})
             x, _ = M.embed_fwd(embed_p, batch, cfg)
-            carry, y = _f_chunk0(carry, mb, x)
-            z = jnp.zeros_like(y)
-            return carry, y, jnp.int32(1), z, jnp.int32(0)
+            carry, y = _f_chunk(carry, mb, 0, x)
+            return carry, acts_out(x0=(y, jnp.int32(1)))
 
         def f0_turn(carry, mb):
-            carry, y = _f_chunk0(carry, mb, _read(carry["x0"], mb))
+            """vshape: chunk-0 output enters chunk 1 on the same device."""
+            carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
             carry = dict(carry, x1=_write(carry["x1"], mb, y))
-            z = jnp.zeros_like(y)
-            return carry, z, jnp.int32(0), z, jnp.int32(0)
+            return carry, acts_out()
+
+        def f0_send1(carry, mb):
+            """parallel: chunk-0 output wraps to device 0's chunk 1."""
+            carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
+            return carry, acts_out(x1=(y, jnp.int32(1)))
+
+        def f0_loss(carry, mb):
+            """flat: last stage forward + loss head, no output."""
+            carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
+            return _head_f(carry, mb, y), acts_out()
 
         def f1(carry, mb):
-            y, ctxs = chunk_f(c1, _read(carry["x1"], mb))
-            carry = dict(carry, ctx1=_write(carry["ctx1"], mb, ctxs))
-            z = jnp.zeros_like(y)
-            return carry, z, jnp.int32(0), y, jnp.int32(1)
+            carry, y = _f_chunk(carry, mb, 1, _read(carry["x1"], mb))
+            return carry, acts_out(x1=(y, jnp.int32(1)))
 
         def f1_loss(carry, mb):
-            y, ctxs = chunk_f(c1, _read(carry["x1"], mb))
-            loss, hctx = M.head_fwd(head_p, tp, y, _read(labels, mb), cfg)
-            carry = dict(carry,
-                         ctx1=_write(carry["ctx1"], mb, ctxs),
-                         hctx=_write(carry["hctx"], mb, hctx),
-                         loss=carry["loss"].at[mb].set(loss))
-            z = jnp.zeros((bmb, seq, d_model), jnp.float32)
-            return carry, z, jnp.int32(0), z, jnp.int32(0)
+            carry, y = _f_chunk(carry, mb, 1, _read(carry["x1"], mb))
+            return _head_f(carry, mb, y), acts_out()
 
         # ---- B branches -------------------------------------------------
         def b_nop(carry, mb):
-            z = jnp.zeros((bmb, seq, d_model), jnp.float32)
-            return carry, z, jnp.int32(0), z, jnp.int32(0)
+            return carry, grads_out()
 
         def _b_chunk(carry, mb, which, gy):
             cp = c0 if which == 0 else c1
@@ -320,8 +379,7 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
 
         def b0(carry, mb):
             carry, gx = _b_chunk(carry, mb, 0, _read(carry["g0"], mb))
-            z = jnp.zeros_like(gx)
-            return carry, z, jnp.int32(0), gx, jnp.int32(1)
+            return carry, grads_out(g0=(gx, jnp.int32(1)))
 
         def b0_embed(carry, mb):
             carry, gx = _b_chunk(carry, mb, 0, _read(carry["g0"], mb))
@@ -330,30 +388,33 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
             _, ectx = M.embed_fwd(embed_p, batch, cfg)
             ge = M.embed_bwd_weight(embed_p, ectx, gx)
             carry = dict(carry, ae=add_partial(carry["ae"], ge))
-            z = jnp.zeros_like(gx)
-            return carry, z, jnp.int32(0), z, jnp.int32(0)
+            return carry, grads_out()
+
+        def b0_loss(carry, mb):
+            """flat: loss head backward + last stage backward."""
+            carry, gy = _head_b(carry, mb)
+            carry, gx = _b_chunk(carry, mb, 0, gy)
+            return carry, grads_out(g0=(gx, jnp.int32(1)))
 
         def b1(carry, mb):
             carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
-            z = jnp.zeros_like(gx)
-            return carry, gx, jnp.int32(1), z, jnp.int32(0)
+            return carry, grads_out(g1=(gx, jnp.int32(1)))
 
         def b1_turn(carry, mb):
+            """vshape: chunk-1 gradient enters chunk 0 on the same device."""
             carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
             carry = dict(carry, g0=_write(carry["g0"], mb, gx))
-            z = jnp.zeros_like(gx)
-            return carry, z, jnp.int32(0), z, jnp.int32(0)
+            return carry, grads_out()
+
+        def b1_send0(carry, mb):
+            """parallel: chunk-1 gradient wraps to device p-1's chunk 0."""
+            carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
+            return carry, grads_out(g0=(gx, jnp.int32(1)))
 
         def b1_loss(carry, mb):
-            hctx = _read(carry["hctx"], mb)
-            gy, htape, hjoint = M.head_bwd_act(head_p, tp, hctx,
-                                               jnp.float32(1.0), cfg)
-            carry = dict(carry,
-                         htape=_write(carry["htape"], mb, htape),
-                         ah=add_partial(carry["ah"], hjoint))
+            carry, gy = _head_b(carry, mb)
             carry, gx = _b_chunk(carry, mb, 1, gy)
-            z = jnp.zeros_like(gx)
-            return carry, gx, jnp.int32(1), z, jnp.int32(0)
+            return carry, grads_out(g1=(gx, jnp.int32(1)))
 
         # ---- W branches -------------------------------------------------
         def w_nop(carry, mb):
@@ -370,60 +431,76 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
             carry[ak] = acc
             return carry
 
+        def _w_head(carry, mb):
+            gh = M.head_bwd_weight(_read(carry["htape"], mb))
+            return dict(carry, ah=add_partial(carry["ah"], gh))
+
         def w0(carry, mb):
             return _w_chunk(carry, mb, 0)
+
+        def w0_head(carry, mb):
+            return _w_head(_w_chunk(carry, mb, 0), mb)
 
         def w1(carry, mb):
             return _w_chunk(carry, mb, 1)
 
         def w1_head(carry, mb):
-            carry = _w_chunk(carry, mb, 1)
-            gh = M.head_bwd_weight(_read(carry["htape"], mb))
-            return dict(carry, ah=add_partial(carry["ah"], gh))
+            return _w_head(_w_chunk(carry, mb, 1), mb)
 
-        # ---- slot body ----------------------------------------------------
+        fdefs = dict(f_nop=f_nop, f0=f0, f0_embed=f0_embed, f0_turn=f0_turn,
+                     f0_send1=f0_send1, f0_loss=f0_loss, f1=f1,
+                     f1_loss=f1_loss)
+        bdefs = dict(b_nop=b_nop, b0=b0, b0_embed=b0_embed, b0_loss=b0_loss,
+                     b1=b1, b1_turn=b1_turn, b1_send0=b1_send0,
+                     b1_loss=b1_loss)
+        wdefs = dict(w_nop=w_nop, w0=w0, w0_head=w0_head, w1=w1,
+                     w1_head=w1_head)
+        f_branches = [fdefs[n] for n in SL.F_BRANCHES[pl.kind]]
+        b_branches = [bdefs[n] for n in SL.B_BRANCHES[pl.kind]]
+        w_branches = [wdefs[n] for n in SL.W_BRANCHES[pl.kind]]
+
+        # ---- slot body --------------------------------------------------
         me = jax.lax.axis_index(stage_axis)
-        perm_up = [(s, s + 1) for s in range(p - 1)]
-        perm_dn = [(s, s - 1) for s in range(1, p)]
+        if wiring["wrap"]:
+            perm_up = [(s, (s + 1) % p) for s in range(p)]
+            perm_dn = [(s, (s - 1) % p) for s in range(p)]
+        else:
+            perm_up = [(s, s + 1) for s in range(p - 1)]
+            perm_dn = [(s, s - 1) for s in range(1, p)]
 
         def slot(carry, codes_t):
             my = codes_t[me]
             fmb, bmb_, wmb = my[1], my[3], my[5]
-            carry, up_a, up_av, dn_a, dn_av = jax.lax.switch(
-                my[0], [f_nop, f0, f0_embed, f0_turn, f1, f1_loss],
-                carry, fmb)
-            carry, up_g, up_gv, dn_g, dn_gv = jax.lax.switch(
-                my[2], [b_nop, b0, b0_embed, b1, b1_turn, b1_loss],
-                carry, bmb_)
-            carry = jax.lax.switch(
-                my[4], [w_nop, w0, w1, w1_head], carry, wmb)
+            carry, acts = jax.lax.switch(my[0], f_branches, carry, fmb)
+            carry, grads = jax.lax.switch(my[2], b_branches, carry, bmb_)
+            carry = jax.lax.switch(my[4], w_branches, carry, wmb)
             # exchange.  mb indices are sent +1 so that the zeros a device
             # receives when it has no upstream decode as "invalid" and land
             # in the scratch row m.
+            stream = {}
+            for s, (val, ok) in zip(act_streams, acts):
+                stream[s] = (val, jnp.where(ok > 0, fmb + 1, 0))
+            for s, (val, ok) in zip(grad_streams, grads):
+                stream[s] = (val, jnp.where(ok > 0, bmb_ + 1, 0))
+
             def send(payload, perm):
                 return jax.tree.map(
                     lambda x: jax.lax.ppermute(x, stage_axis, perm), payload)
 
-            rx0, rx0_mb, rg1, rg1_mb = send(
-                (up_a, jnp.where(up_av > 0, fmb + 1, 0),
-                 up_g, jnp.where(up_gv > 0, bmb_ + 1, 0)), perm_up)
-            rx1, rx1_mb, rg0, rg0_mb = send(
-                (dn_a, jnp.where(dn_av > 0, fmb + 1, 0),
-                 dn_g, jnp.where(dn_gv > 0, bmb_ + 1, 0)), perm_dn)
-            slot_of = lambda idx: jnp.where(idx > 0, idx - 1, m)
-            carry = dict(
-                carry,
-                x0=_write(carry["x0"], slot_of(rx0_mb), rx0),
-                g1=_write(carry["g1"], slot_of(rg1_mb), rg1),
-                x1=_write(carry["x1"], slot_of(rx1_mb), rx1),
-                g0=_write(carry["g0"], slot_of(rg0_mb), rg0),
-            )
+            for names, perm in ((wiring["up"], perm_up),
+                                (wiring["dn"], perm_dn)):
+                rx = send(tuple(stream[s] for s in names), perm)
+                for s, (val, mbidx) in zip(names, rx):
+                    row = jnp.where(mbidx > 0, mbidx - 1, m)
+                    carry = dict(carry,
+                                 **{s: _write(carry[s], row, val)})
             return carry, None
 
         carry, _ = jax.lax.scan(slot, carry, codes)
         loss = jax.lax.psum(carry["loss"].sum() * scale, stage_axis)
         g0 = jax.tree.map(lambda a: a[None], carry["a0"])
-        g1 = jax.tree.map(lambda a: a[None], carry["a1"])
+        g1 = (jax.tree.map(lambda a: a[None], carry["a1"])
+              if two_chunks else {})
         ge = jax.tree.map(lambda a: jax.lax.psum(a, stage_axis), carry["ae"])
         gh = jax.tree.map(lambda a: jax.lax.psum(a, stage_axis), carry["ah"])
         return loss, g0, g1, ge, gh

@@ -93,26 +93,42 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh
 from repro.configs import get_config
-from repro.core.schedule import build
+from repro.core.schedule import build, memory_bound
+from repro.core.simulator import verify_tables
 from repro.models import model as M
-from repro.pipeline.reference import reference_grads
+from repro.pipeline.reference import pipeline_grads, reference_grads
 from repro.pipeline.spmd import (build_pipeline_step, stack_stage_params,
                                  unstack_stage_grads)
 
-p, tp_size = {p}, {tp}
-cfg = get_config("qwen3-4b").reduced(n_layers=2*p, d_model=64, n_heads=4,
-                                     vocab=128)
+p, tp_size, m = {p}, {tp}, {m}
+tables, pl = build("{kind}", p, m)
+verify_tables(tables, pl, m, mem_bound=memory_bound("{kind}", p, m))
+cfg = get_config("qwen3-4b").reduced(n_layers=pl.n_vs, d_model=64,
+                                     n_heads=4, vocab=128)
 key = jax.random.PRNGKey(0)
 params = M.init_params(key, cfg)
-m, b, s = {m}, 2, 16
+b, s = 2, 16
 ks = jax.random.split(key, m)
 batches = [{{"tokens": jax.random.randint(k, (b, s), 0, cfg.vocab),
             "labels": jax.random.randint(k, (b, s), 0, cfg.vocab)}}
            for k in ks]
+
+def rel(g, g_ref):
+    fp, tp_ = jax.tree.flatten(g)
+    fr, tr = jax.tree.flatten(g_ref)
+    assert tr == tp_
+    return max(float(np.max(np.abs(a - bb)) / (np.max(np.abs(bb)) + 1e-9))
+               for a, bb in zip(fp, fr))
+
+# differential: jax.grad oracle, (slow tier) reference table executor, SPMD
 loss_ref, g_ref = reference_grads(params, batches, cfg)
+if {with_ref}:
+    loss_tab, g_tab = pipeline_grads(params, batches, tables, pl, cfg)
+    assert np.allclose(loss_tab, loss_ref, rtol=1e-5), (loss_tab, loss_ref)
+    assert rel(g_tab, g_ref) < 1e-4
+
 mesh = Mesh(np.array(jax.devices()).reshape(p, tp_size), ("stage", "model"))
-tables, pl = build("{kind}", p, m)
-c0, c1, lvs = stack_stage_params(params, cfg, p)
+c0, c1, lvs = stack_stage_params(params, cfg, p, kind=pl.kind)
 step = build_pipeline_step(cfg, tables, pl, mesh, m, (b, s),
                            (c0, c1, params["embed"], params["head"]),
                            model_axis={model_axis})
@@ -123,17 +139,22 @@ with mesh:
                                 tokens, labels)
 assert np.allclose(loss, loss_ref, rtol=1e-5), (loss, loss_ref)
 blocks = unstack_stage_grads(jax.device_get(g0), jax.device_get(g1),
-                             cfg, p, lvs)
+                             cfg, p, lvs, kind=pl.kind)
 g = {{"embed": jax.device_get(ge), "blocks": blocks,
      "head": jax.device_get(gh)}}
-fr, tr = jax.tree.flatten(g_ref)
-fp, tp_ = jax.tree.flatten(g)
-assert tr == tp_
-err = max(float(np.max(np.abs(a - bb)) / (np.max(np.abs(bb)) + 1e-9))
-          for a, bb in zip(fp, fr))
+err = rel(g, g_ref)
 assert err < 1e-4, err
 print("OK", float(loss), err)
 """
+
+
+def _spmd_case(kind, p, tp, m, ndev=4, with_ref=True):
+    script = SPMD_SCRIPT.format(
+        ndev=ndev, p=p, tp=tp, m=m, kind=kind,
+        model_axis='"model"' if tp > 1 else "None",
+        with_ref="True" if with_ref else "False")
+    out = _run_sub(script)
+    assert "OK" in out
 
 
 @pytest.mark.parametrize("kind,p,tp,ndev", [
@@ -143,8 +164,25 @@ print("OK", float(loss), err)
     ("stp-memeff", 2, 2, 4),
 ])
 def test_spmd_executor_multidevice(kind, p, tp, ndev):
-    script = SPMD_SCRIPT.format(
-        ndev=ndev, p=p, tp=tp, m=6, kind=kind,
-        model_axis='"model"' if tp > 1 else "None")
-    out = _run_sub(script)
-    assert "OK" in out
+    # no reference-executor pass here: keeps the unmarked (fast-tier) cases
+    # at their original cost; the slow tier runs the full three-way diff.
+    _spmd_case(kind, p, tp, m=6, ndev=ndev, with_ref=False)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind,p,tp,m", [
+    ("gpipe", 4, 1, 4),        # flat placement, pure PP
+    ("gpipe", 2, 2, 4),        # flat placement composed with TP
+    ("1f1b", 4, 1, 6),
+    ("1f1b", 2, 2, 6),
+    ("1f1b-i", 4, 1, 8),       # parallel placement (wrap-around ring)
+    ("1f1b-i", 2, 2, 4),
+    ("zb-v", 4, 1, 6),         # vshape at full stage depth
+    ("stp-memeff", 4, 1, 6),
+])
+def test_spmd_executor_all_schedules(kind, p, tp, m):
+    """Differential conformance over every placement family: the SPMD
+    shard_map runtime must match both the reference table executor and the
+    monolithic jax.grad oracle for every schedule kind on a real 4-device
+    (stage x model) mesh."""
+    _spmd_case(kind, p, tp, m)

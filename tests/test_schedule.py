@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 
 from repro.core import schedule as sch
-from repro.core.simulator import StageTimes, simulate
+from repro.core.simulator import (ScheduleVerificationError, StageTimes,
+                                  simulate, verify_tables)
 from repro.core.theory import THEORY, UnitTimes, ideal_time
 
 
@@ -26,6 +27,45 @@ def test_schedule_valid_and_complete(kind, p, m):
     # ideal work is a lower bound; 3x is a generous sanity ceiling
     ideal = ideal_time(p, m, u)
     assert ideal <= res.total_time < 3 * ideal + 100
+
+
+@pytest.mark.parametrize("kind", sch.SCHEDULES)
+@pytest.mark.parametrize("p,m", [(2, 8), (4, 12), (8, 16), (4, 64)])
+def test_ir_verifier_conformance(kind, p, m):
+    """Static IR verification of every schedule table: dependencies
+    satisfiable without deadlock, no double-free of activations or weight
+    tapes, nothing leaked, and per-device peak in-flight activations within
+    the schedule's Table-1 memory bound."""
+    tables, pl = sch.build(kind, p, m)
+    peak = verify_tables(tables, pl, m,
+                         mem_bound=sch.memory_bound(kind, p, m))
+    assert peak.max() > 0
+
+
+def test_ir_verifier_rejects_malformed():
+    p, m = 2, 4
+    tables, pl = sch.build("stp", p, m)
+    # duplicate op (also covers double-issue of a B/W)
+    bad = [list(t) for t in tables]
+    bad[0] = bad[0] + [bad[0][0]]
+    with pytest.raises(ScheduleVerificationError, match="duplicate"):
+        verify_tables(bad, pl, m)
+    # incomplete schedule (a dropped W leaks its tape)
+    bad = [list(t) for t in tables]
+    w_at = next(i for i, ins in enumerate(bad[0])
+                if ins.kind == "W")
+    del bad[0][w_at]
+    with pytest.raises(ScheduleVerificationError, match="incomplete"):
+        verify_tables(bad, pl, m)
+    # dependency deadlock: a full backward hoisted before its own forward
+    gt, gpl = sch.build("gpipe", 2, 2)
+    bad = [list(t) for t in gt]
+    bad[0].insert(0, bad[0].pop(2))           # BW(0,0) before F(0,0)
+    with pytest.raises(ScheduleVerificationError, match="deadlock"):
+        verify_tables(bad, gpl, 2)
+    # memory bound violation
+    with pytest.raises(ScheduleVerificationError, match="exceeds"):
+        verify_tables(tables, pl, m, mem_bound=1.0)
 
 
 @pytest.mark.parametrize("p,m", [(2, 16), (4, 16), (8, 48)])
