@@ -1,0 +1,90 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+"""Apples-to-apples cross-schedule throughput benchmark (ROADMAP item).
+
+All six ``SCHEDULES`` run through the *same* ``SpmdRunner`` (shard_map
+runtime + in-mesh AdamW) on fake CPU devices, so relative wall-clock is a
+property of the schedule alone: same model, same data, same mesh, same
+fused train step.  For each kind we report
+
+  * measured wall-clock per step and per lockstep *slot* (the SPMD runtime
+    executes the slot grid rows in sequence, so ms/slot is the measured
+    analogue of the simulator's unit time);
+  * the ``core/simulator`` prediction: total time units, predicted bubble
+    fraction (pp_bubble_mean / total), and predicted relative throughput
+    normalised to the best schedule.
+
+Fake-device caveat: all devices share one CPU, so measured slot time folds
+every stage's compute into one core and bubbles show up as *less* work per
+slot, not idle silicon — rank agreement (and slot counts), not absolute
+ratios, is the comparable signal.  Emits ``experiments/BENCH_schedules.json``.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+  PYTHONPATH=src python -m benchmarks.bench_schedules
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import T_B, T_F, T_W, time_runner, write_json
+from repro.api import make_runner
+from repro.configs import get_config
+from repro.core.schedule import SCHEDULES, build
+from repro.core.simulator import StageTimes, simulate
+from repro.data import DataConfig, make_batches
+from repro.models import model as M
+from repro.optim import OptConfig
+from repro.pipeline import slots as SL
+
+
+def main(pp: int = 2, m: int = 4, steps: int = 4, warmup: int = 1):
+    ndev = len(jax.devices())
+    assert ndev % pp == 0, f"{ndev} devices not divisible by pp={pp}"
+    tp = ndev // pp
+    cfg = get_config("qwen3-4b").reduced(n_layers=4, d_model=64, n_heads=4,
+                                         vocab=256)
+    oc = OptConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    dc = DataConfig(seq_len=32, global_batch=4 * m, microbatches=m)
+    batches = [{k: jnp.asarray(v) for k, v in raw.items()}
+               for raw in make_batches(cfg, dc, steps)]
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    results = {}
+    for kind in SCHEDULES:
+        tables, pl = build(kind, pp, m)
+        n_slots = len(SL.encode(SL.to_slots(tables, pl), pl))
+        sim = simulate(tables, pl,
+                       StageTimes.uniform(pl.n_vs, t_f=T_F, t_b=T_B,
+                                          t_w=T_W, t_ar=0.0), m)
+        runner = make_runner("spmd", cfg, oc, dc, schedule=kind, pp=pp,
+                             tp=tp)
+        state = runner.init_state(params)
+        wall, state, metrics = time_runner(runner, state, batches,
+                                           warmup=warmup)
+        results[kind] = {
+            "placement": pl.kind,
+            "n_slots": n_slots,
+            "wall_s_per_step": round(wall, 4),
+            "wall_ms_per_slot": round(1e3 * wall / n_slots, 3),
+            "sim_total_units": sim.total_time,
+            "sim_bubble_frac": round(float(sim.pp_bubble.mean()
+                                           / sim.total_time), 4),
+            "loss": round(float(metrics["loss"]), 4),
+        }
+        print(f"[{kind:10s}] {results[kind]}", flush=True)
+
+    best_sim = min(r["sim_total_units"] for r in results.values())
+    best_wall = min(r["wall_s_per_step"] for r in results.values())
+    for r in results.values():
+        r["sim_rel_throughput"] = round(best_sim / r["sim_total_units"], 4)
+        r["wall_rel_throughput"] = round(best_wall / r["wall_s_per_step"], 4)
+    write_json("BENCH_schedules", {
+        "setup": {"pp": pp, "tp": tp, "microbatches": m, "steps": steps,
+                  "arch": cfg.name, "devices": ndev,
+                  "runner": "SpmdRunner (fused in-mesh AdamW)"},
+        "schedules": results,
+    })
+
+
+if __name__ == "__main__":
+    main()

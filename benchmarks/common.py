@@ -14,7 +14,9 @@ from __future__ import annotations
 
 import csv
 import io
+import json
 import sys
+import time
 from pathlib import Path
 
 from repro.core.simulator import StageTimes
@@ -40,6 +42,34 @@ def times_for(tp: int, pp: int, seq: int = 6144, t_comm: float = 0.0,
     if vit_factor != 1.0:
         t = t.scaled_vs(0, vit_factor)
     return t
+
+
+def write_json(name: str, obj) -> Path:
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / f"{name}.json"
+    text = json.dumps(obj, indent=1)
+    path.write_text(text)
+    print(f"--- {name} ({path}) ---")
+    print(text)
+    return path
+
+
+def time_runner(runner, state, batches, *, warmup: int = 1):
+    """Drive any ``repro.api.Runner`` over ``batches`` and return
+    (seconds per steady-state step, final state, last metrics).  The first
+    ``warmup`` steps (compile + cache fill) are excluded."""
+    import jax                       # lazy: most benchmarks are sim-only
+
+    batches = list(batches)
+    t0 = time.time()
+    metrics = {}
+    for i, batch in enumerate(batches):
+        state, metrics = runner.step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        if i + 1 == warmup:
+            t0 = time.time()
+    steady = max(len(batches) - warmup, 1)
+    return (time.time() - t0) / steady, state, metrics
 
 
 def write_csv(name: str, header, rows):

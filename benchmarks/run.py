@@ -10,6 +10,17 @@ from benchmarks import (appA_warmup, fig1_tp_overlap, fig7_fig8_llm,
                         fig9_memory, fig10_offload, roofline, table1_theory,
                         table3_mllm, table4_mfu)
 
+def _schedules():
+    # subprocess: device count must be fixed before jax initializes
+    import os
+    import subprocess
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               JAX_PLATFORMS="cpu")
+    subprocess.run([sys.executable, "-m", "benchmarks.bench_schedules"],
+                   check=True, env=env)
+
+
 ALL = {
     "table1": table1_theory.main,
     "fig1": fig1_tp_overlap.main,
@@ -20,6 +31,7 @@ ALL = {
     "appA": appA_warmup.main,
     "table4": table4_mfu.main,
     "roofline": roofline.main,
+    "schedules": _schedules,
 }
 
 

@@ -1,9 +1,12 @@
-"""End-to-end training driver: data pipeline -> pipeline schedule ->
-AdamW -> checkpoint, with a verifying loss curve.
+"""End-to-end training driver: data pipeline -> Runner API (pipeline
+schedule -> AdamW) -> canonical checkpoint, with a verifying loss curve.
 
 Any of the six schedule kinds works (``--schedule``); all lower through the
 same table -> IR -> executor stack, so the loss curve is schedule-invariant
-up to float reassociation.
+up to float reassociation.  ``--runtime`` picks the executor: the default
+single-process reference executor, or ``spmd`` for the shard_map runtime
+with in-mesh AdamW (needs ``--pp`` fake/real devices, e.g.
+XLA_FLAGS=--xla_force_host_platform_device_count=2).
 
 Default scale is CPU-friendly (~1M params, 60 steps, loss must drop);
 ``--full`` trains a ~100M-param model for 300 steps (the deliverable-scale
@@ -19,13 +22,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import save_checkpoint
+from repro.api import make_runner, save_state
 from repro.configs import get_config
-from repro.core.schedule import SCHEDULES, build
-from repro.data import DataConfig, make_batches, microbatches
+from repro.core.schedule import SCHEDULES
+from repro.data import DataConfig, make_batches
 from repro.models import model as M
-from repro.optim import OptConfig, adamw_init, adamw_update
-from repro.pipeline.reference import pipeline_grads
+from repro.optim import OptConfig
 
 
 def main():
@@ -33,6 +35,8 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--schedule", default="stp", choices=SCHEDULES)
     ap.add_argument("--pp", type=int, default=2)
+    ap.add_argument("--runtime", choices=("pipeline", "spmd"),
+                    default="pipeline")
     ap.add_argument("--ckpt", default="/tmp/repro_e2e_ckpt")
     args = ap.parse_args()
 
@@ -56,29 +60,30 @@ def main():
     n_params = sum(x.size for x in jax.tree.leaves(
         M.init_params(jax.random.PRNGKey(0), cfg)))
     print(f"training {cfg.name}: {n_params / 1e6:.1f}M params, "
-          f"{steps} steps, {args.schedule} schedule p={args.pp} m={m}")
+          f"{steps} steps, {args.schedule} schedule p={args.pp} m={m} "
+          f"({args.runtime})")
 
-    params = M.init_params(jax.random.PRNGKey(0), cfg)
     oc = OptConfig(lr=3e-3, warmup_steps=max(2, steps // 20),
                    total_steps=steps)
-    opt = adamw_init(params)
-    tables, pl = build(args.schedule, args.pp, m)
-    dc = DataConfig(seq_len=seq, global_batch=batch)
+    dc = DataConfig(seq_len=seq, global_batch=batch, microbatches=m)
+    runner = make_runner(args.runtime, cfg, oc, dc, schedule=args.schedule,
+                         pp=args.pp)
+    state = runner.init_state(M.init_params(jax.random.PRNGKey(0), cfg))
 
     losses = []
     t0 = time.time()
     for i, raw in enumerate(make_batches(cfg, dc, steps)):
-        mbs = microbatches({k: jnp.asarray(v) for k, v in raw.items()}, m)
-        loss, grads = pipeline_grads(params, mbs, tables, pl, cfg)
-        params, opt, gn = adamw_update(params, grads, opt, oc)
-        losses.append(float(loss))
+        batch_arrs = {k: jnp.asarray(v) for k, v in raw.items()}
+        state, metrics = runner.step(state, batch_arrs)
+        losses.append(float(metrics["loss"]))
         if i % max(1, steps // 12) == 0:
             tok_s = batch * seq * (i + 1) / (time.time() - t0)
             print(f"step {i:4d} loss {losses[-1]:.4f} "
-                  f"gnorm {float(gn):.2f} tok/s {tok_s:,.0f}", flush=True)
+                  f"gnorm {float(metrics['gnorm']):.2f} tok/s {tok_s:,.0f}",
+                  flush=True)
 
-    save_checkpoint(args.ckpt, (params, opt), step=steps,
-                    extra={"arch": cfg.name, "final_loss": losses[-1]})
+    save_state(args.ckpt, state,
+               extra={"arch": cfg.name, "final_loss": losses[-1]})
     first = sum(losses[:5]) / 5
     last = sum(losses[-5:]) / 5
     print(f"loss {first:.4f} -> {last:.4f} "

@@ -1,0 +1,19 @@
+"""Public training API surface.
+
+    from repro.api import (TrainState, Layout, Runner, PjitRunner,
+                           ReferenceRunner, SpmdRunner, make_runner,
+                           save_state, load_state)
+
+One ``TrainState`` pytree (layout-resident params + AdamW moments + step)
+and one ``runner.step(state, batch) -> (state, metrics)`` loop cover all
+three runtimes; checkpoints are canonical-layout and runtime-portable.
+See docs/API.md.
+"""
+from repro.launch.runner import (PjitRunner, ReferenceRunner, Runner,
+                                 SpmdRunner, make_runner)
+from repro.launch.state import (Layout, TrainState, decay_mask,
+                                load_canonical, load_state, save_state)
+
+__all__ = ["TrainState", "Layout", "decay_mask", "Runner", "PjitRunner",
+           "ReferenceRunner", "SpmdRunner", "make_runner", "save_state",
+           "load_state", "load_canonical"]

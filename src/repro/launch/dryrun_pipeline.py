@@ -7,10 +7,15 @@ exchanges and TP collectives — on a production (data, stage, model) mesh.
 Proves the ``stage`` axis of the paper's runtime shards (the train_step
 dry-run covers the (data, model) axes).
 
+By default this lowers the *fused* train step (schedule execution +
+global-norm clip + in-mesh AdamW on mesh-resident state — what
+``SpmdRunner`` executes); ``--grads-only`` lowers the grads-returning step
+the differential tests use.
+
   PYTHONPATH=src python -m repro.launch.dryrun_pipeline \
       --arch stablelm-3b --pp 4 --tp 4 --microbatches 8
   PYTHONPATH=src python -m repro.launch.dryrun_pipeline \
-      --arch stablelm-3b --schedule 1f1b --pp 8 --tp 2
+      --arch stablelm-3b --schedule 1f1b --pp 8 --tp 2 --grads-only
 """
 import argparse
 import json
@@ -19,13 +24,15 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.schedule import build as build_schedule
 from repro.launch.hlo_analysis import analyze
 from repro.models import model as M
-from repro.pipeline.spmd import build_pipeline_step, stack_stage_params
+from repro.optim import OptConfig
+from repro.pipeline.spmd import (build_pipeline_step,
+                                 build_pipeline_train_step,
+                                 stack_stage_params)
 
 
 def main():
@@ -38,6 +45,9 @@ def main():
     ap.add_argument("--microbatches", type=int, default=8)
     ap.add_argument("--seq", type=int, default=4096)
     ap.add_argument("--mb-batch", type=int, default=2)
+    ap.add_argument("--grads-only", action="store_true",
+                    help="lower the grads-returning step instead of the "
+                         "fused train step")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -53,23 +63,36 @@ def main():
         c0, c1, _ = stack_stage_params(p, cfg, args.pp, kind=pl.kind)
         return c0, c1, p["embed"], p["head"]
 
-    c0, c1, embed_p, head_p = jax.eval_shape(init_sds)
+    trees = jax.eval_shape(init_sds)
+    c0, c1, embed_p, head_p = trees
     m, b, s = args.microbatches, args.mb_batch, args.seq
     tokens = jax.ShapeDtypeStruct((m, b, s), jnp.int32)
     labels = jax.ShapeDtypeStruct((m, b, s), jnp.int32)
 
     t0 = time.time()
-    step = build_pipeline_step(cfg, tables, pl, mesh, m, (b, s),
-                               (c0, c1, embed_p, head_p),
-                               model_axis="model")
+    if args.grads_only:
+        step = build_pipeline_step(cfg, tables, pl, mesh, m, (b, s), trees,
+                                   model_axis="model")
+        lower_args = (c0, c1, embed_p, head_p, tokens, labels)
+    else:
+        step = build_pipeline_train_step(
+            cfg, tables, pl, mesh, m, (b, s), trees, OptConfig(),
+            model_axis="model")
+        params = {"c0": c0, "c1": c1, "embed": embed_p, "head": head_p}
+        zeros = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        opt = {"mu": zeros, "nu": zeros,
+               "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        lower_args = (params, opt, tokens, labels)
     with mesh:
-        lowered = step.lower(c0, c1, embed_p, head_p, tokens, labels)
+        lowered = step.lower(*lower_args)
         compiled = lowered.compile()
     dt = time.time() - t0
     mem = compiled.memory_analysis()
     r = analyze(compiled.as_text())
     res = {
         "arch": cfg.name, "schedule": args.schedule,
+        "step": "grads" if args.grads_only else "fused_train",
         "mesh": f"data={args.data}xstage={args.pp}xmodel={args.tp}",
         "chips": args.data * args.pp * args.tp,
         "microbatches": m, "compile_s": round(dt, 1),

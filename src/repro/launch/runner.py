@@ -1,0 +1,191 @@
+"""One train loop for all runtimes: the ``Runner`` protocol.
+
+Every runner exposes
+
+    runner.layout                      # the TrainState layout it consumes
+    runner.init_state(params, opt)     # canonical -> layout TrainState
+    runner.step(state, batch)          # -> (state', {"loss", "gnorm"})
+    runner.describe                    # short tag for log lines
+
+over a *global* batch dict (``{"tokens"|"embeds", "labels"}``), so
+``launch.train`` (and any benchmark) is a single loop regardless of
+runtime:
+
+  PjitRunner      — data-parallel jit train_step on period-stacked params.
+  ReferenceRunner — any schedule through the single-process reference
+                    executor (numerics oracle) + host AdamW.
+  SpmdRunner      — any schedule through the shard_map runtime on a real
+                    (stage[, model]) mesh with the AdamW update fused
+                    under shard_map: params and moments are mesh-resident
+                    and never round-trip the host between steps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.schedule import build as build_schedule, memory_bound
+from repro.core.simulator import verify_tables
+from repro.data import DataConfig, microbatches
+from repro.launch.state import Layout, TrainState, decay_mask
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import OptConfig, adamw_update
+from repro.pipeline.reference import pipeline_grads
+from repro.pipeline.spmd import (build_pipeline_train_step, stack_stage_params,
+                                 stage_param_specs, stages_per_chunk)
+
+
+class Runner(Protocol):
+    layout: Layout
+    describe: str
+
+    def init_state(self, params, opt=None) -> TrainState: ...
+
+    def step(self, state: TrainState, batch: dict
+             ) -> tuple[TrainState, dict]: ...
+
+
+def _batch_key(cfg: ModelConfig) -> str:
+    return "tokens" if cfg.frontend == "text" else "embeds"
+
+
+class PjitRunner:
+    """jit train_step over period-stacked params (the dry-run's step at
+    real, reduced scale)."""
+
+    def __init__(self, cfg: ModelConfig, oc: OptConfig):
+        self.cfg, self.oc = cfg, oc
+        self.layout = Layout("period", cfg.n_layers,
+                             period=M.period_of(cfg))
+        self.describe = "pjit"
+
+        @jax.jit
+        def _step(state: TrainState, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: M.loss_fn(p, batch, cfg))(state.params)
+            mask = decay_mask(state.params, state.layout)
+            p2, o2, gn = adamw_update(state.params, grads, state.opt, oc,
+                                      decay_mask=mask)
+            return TrainState(p2, o2, state.layout), loss, gn
+
+        self._step = _step
+
+    def init_state(self, params, opt=None) -> TrainState:
+        return TrainState.from_canonical(params, self.layout, opt=opt)
+
+    def step(self, state, batch):
+        state, loss, gn = self._step(state, batch)
+        return state, {"loss": loss, "gnorm": gn}
+
+
+class ReferenceRunner:
+    """Schedule-table execution through the single-process reference
+    executor; canonical params, host AdamW."""
+
+    def __init__(self, cfg: ModelConfig, oc: OptConfig, kind: str, p: int,
+                 m: int):
+        self.cfg, self.oc, self.m = cfg, oc, m
+        self.tables, self.pl = build_schedule(kind, p, m)
+        self.layout = Layout("canonical", cfg.n_layers)
+        self.describe = f"{kind} p={p} m={m}"
+
+    def init_state(self, params, opt=None) -> TrainState:
+        return TrainState.from_canonical(params, self.layout, opt=opt)
+
+    def step(self, state, batch):
+        mbs = microbatches(batch, self.m)
+        loss, grads = pipeline_grads(state.params, mbs, self.tables,
+                                     self.pl, self.cfg)
+        p2, o2, gn = adamw_update(state.params, grads, state.opt, self.oc)
+        return TrainState(p2, o2, state.layout), {"loss": loss, "gnorm": gn}
+
+
+class SpmdRunner:
+    """shard_map runtime on a (stage[, model]) mesh with in-mesh AdamW.
+
+    The fused step (``pipeline.spmd.build_pipeline_train_step``) consumes
+    and produces mesh-resident stacked params + moments, so the per-step
+    host ``stack_stage_params`` round-trip of the old ``grads_fn`` path is
+    gone: the host only touches microbatch tokens/labels.
+    """
+
+    def __init__(self, cfg: ModelConfig, oc: OptConfig, kind: str, p: int,
+                 m: int, mb_shape, *, tp: int = 1,
+                 mesh: Optional[Mesh] = None):
+        self.cfg, self.oc, self.m = cfg, oc, m
+        if mesh is None:
+            ndev = len(jax.devices())
+            if p * tp != ndev:
+                raise ValueError(
+                    f"spmd runtime needs pp*tp == device count (pp={p}, "
+                    f"tp={tp}, devices={ndev}); set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=N")
+            mesh = Mesh(np.array(jax.devices()).reshape(p, tp),
+                        ("stage", "model"))
+        self.mesh = mesh
+        tables, pl = build_schedule(kind, p, m)
+        verify_tables(tables, pl, m, mem_bound=memory_bound(kind, p, m))
+        self.pl = pl
+        self.layout = Layout("stage", cfg.n_layers, p=p,
+                             lvs=stages_per_chunk(cfg, p, pl.kind),
+                             placement=pl.kind)
+        self.describe = f"spmd {kind} {pl.kind} p={p} tp={tp} m={m}"
+        model_axis = "model" if tp > 1 else None
+
+        def sds(key):
+            prm = M.init_params(key, cfg)
+            c0, c1, _ = stack_stage_params(prm, cfg, p, kind=pl.kind)
+            return c0, c1, prm["embed"], prm["head"]
+
+        trees = jax.eval_shape(sds, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        self._step = build_pipeline_train_step(
+            cfg, tables, pl, mesh, m, mb_shape, trees, oc,
+            model_axis=model_axis)
+        pspec = stage_param_specs(trees, model_axis=model_axis)
+        self._shardings = {
+            "params": jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
+            "opt": {"mu": jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                       pspec),
+                    "nu": jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                       pspec),
+                    "step": NamedSharding(mesh, P())},
+        }
+
+    def init_state(self, params, opt=None) -> TrainState:
+        """Stack canonical params/moments once and place them on the mesh;
+        after this, steps never re-stack host-side."""
+        st = TrainState.from_canonical(params, self.layout, opt=opt)
+        return TrainState(
+            jax.device_put(st.params, self._shardings["params"]),
+            jax.device_put(st.opt, self._shardings["opt"]),
+            self.layout)
+
+    def step(self, state, batch):
+        mbs = microbatches(batch, self.m)
+        key = _batch_key(self.cfg)
+        tokens = jnp.stack([b[key] for b in mbs])
+        labels = jnp.stack([b["labels"] for b in mbs])
+        with self.mesh:
+            p2, o2, loss, gn = self._step(state.params, state.opt,
+                                          tokens, labels)
+        return TrainState(p2, o2, state.layout), {"loss": loss, "gnorm": gn}
+
+
+def make_runner(runtime: str, cfg: ModelConfig, oc: OptConfig,
+                dc: DataConfig, *, schedule: str = "stp", pp: int = 2,
+                tp: int = 1, mesh: Optional[Mesh] = None) -> Runner:
+    """Factory over the three runtimes ('pjit' | 'pipeline' | 'spmd')."""
+    if runtime == "pjit":
+        return PjitRunner(cfg, oc)
+    if runtime == "spmd":
+        mb = dc.global_batch // dc.microbatches
+        return SpmdRunner(cfg, oc, schedule, pp, dc.microbatches,
+                          (mb, dc.seq_len), tp=tp, mesh=mesh)
+    if runtime == "pipeline":
+        return ReferenceRunner(cfg, oc, schedule, pp, dc.microbatches)
+    raise ValueError(f"unknown runtime {runtime!r}")

@@ -1,0 +1,158 @@
+"""Runtime-portable training state.
+
+``TrainState`` is a pytree holding layout-resident params + AdamW moments +
+step.  Three layouts cover the three runtimes:
+
+  canonical — per-layer ``blocks`` list (reference executor, host AdamW)
+  period    — period-stacked blocks for the pjit scan path
+  stage     — per-(device, chunk) stacked ``{"c0","c1","embed","head"}``
+              dict for the shard_map SPMD runtime (mesh-resident)
+
+``from_canonical`` / ``to_canonical`` are the only stack/unstack points in
+the training stack; they convert params *and* moments together so optimizer
+state survives layout changes.  Checkpoints are always written in canonical
+layout (``save_state`` / ``load_state``), so any runtime resumes any other
+runtime's checkpoint — including step count and AdamW moments.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init
+from repro.pipeline.spmd import stack_stages, unstack_stages
+
+
+@dataclass(frozen=True)
+class Layout:
+    """Static (hashable) description of how params/moments are arranged."""
+    kind: str = "canonical"        # canonical | period | stage
+    n_layers: int = 0
+    period: int = 1                # period layout: scan period
+    p: int = 1                     # stage layout: pipeline depth
+    lvs: int = 1                   # stage layout: layers per virtual stage
+    placement: str = "vshape"      # stage layout: flat | parallel | vshape
+
+
+def _stack_tree(tree, layout: Layout):
+    """Canonical params-shaped tree {'embed','blocks','head'} -> layout."""
+    if layout.kind == "canonical":
+        return tree
+    if layout.kind == "period":
+        return {"embed": tree["embed"],
+                "blocks": M.stack_blocks(tree["blocks"], layout.period),
+                "head": tree["head"]}
+    c0, c1 = stack_stages(tree["blocks"], layout.p, layout.lvs,
+                          layout.placement)
+    return {"c0": c0, "c1": c1, "embed": tree["embed"],
+            "head": tree["head"]}
+
+
+def _unstack_tree(tree, layout: Layout):
+    """Inverse of ``_stack_tree`` (device arrays are fetched to host)."""
+    if layout.kind == "canonical":
+        return tree
+    tree = jax.device_get(tree)
+    if layout.kind == "period":
+        return {"embed": tree["embed"],
+                "blocks": M.unstack_blocks(tree["blocks"], layout.period),
+                "head": tree["head"]}
+    blocks = unstack_stages(tree["c0"], tree["c1"], layout.n_layers,
+                            layout.p, layout.lvs, layout.placement)
+    return {"embed": tree["embed"], "blocks": blocks, "head": tree["head"]}
+
+
+def decay_mask(params, layout: Layout):
+    """Weight-decay eligibility per leaf: canonical rank >= 2, i.e. the
+    layout's stacking dims (1 for period blocks, 2 for stage chunks) do not
+    promote biases/norm gains into decayed matrices."""
+    rank = lambda lead: (lambda x: x.ndim - lead >= 2)
+    if layout.kind == "canonical":
+        return jax.tree.map(rank(0), params)
+    if layout.kind == "period":
+        return {"embed": jax.tree.map(rank(0), params["embed"]),
+                "blocks": jax.tree.map(rank(1), params["blocks"]),
+                "head": jax.tree.map(rank(0), params["head"])}
+    return {"c0": jax.tree.map(rank(2), params["c0"]),
+            "c1": jax.tree.map(rank(2), params["c1"]),
+            "embed": jax.tree.map(rank(0), params["embed"]),
+            "head": jax.tree.map(rank(0), params["head"])}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class TrainState:
+    """Layout-resident params + AdamW state; a jit-able pytree whose static
+    aux data is the :class:`Layout`."""
+    params: Any
+    opt: Any                       # {"mu", "nu", "step"} mirroring params
+    layout: Layout
+
+    def tree_flatten(self):
+        return (self.params, self.opt), self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, children):
+        return cls(children[0], children[1], layout)
+
+    @property
+    def step(self):
+        return self.opt["step"]
+
+    @classmethod
+    def from_canonical(cls, params, layout: Layout, opt=None) -> "TrainState":
+        """Build from canonical params (+ optional canonical AdamW state —
+        fresh moments otherwise), converting both into ``layout``."""
+        opt = adamw_init(params) if opt is None else opt
+        return cls(params=_stack_tree(params, layout),
+                   opt={"mu": _stack_tree(opt["mu"], layout),
+                        "nu": _stack_tree(opt["nu"], layout),
+                        "step": jnp.asarray(opt["step"], jnp.int32)},
+                   layout=layout)
+
+    def to_canonical(self):
+        """-> (params, opt) in canonical layout (host-side)."""
+        params = _unstack_tree(self.params, self.layout)
+        opt = {"mu": _unstack_tree(self.opt["mu"], self.layout),
+               "nu": _unstack_tree(self.opt["nu"], self.layout),
+               "step": jax.device_get(self.opt["step"])}
+        return params, opt
+
+
+# ---------------------------------------------------------------------------
+# Canonical-layout checkpointing: one on-disk format for all runtimes.
+# ---------------------------------------------------------------------------
+
+def save_state(directory, state: TrainState, *, extra: Optional[dict] = None):
+    """Checkpoint ``state`` in canonical layout (runtime-portable)."""
+    params, opt = state.to_canonical()
+    save_checkpoint(directory, (params, opt), step=int(opt["step"]),
+                    extra=extra or {})
+
+
+def load_canonical(directory, cfg: ModelConfig
+                   ) -> tuple[Any, Any, int, dict]:
+    """Read a canonical checkpoint; returns (params, opt, step, extra).
+    Resuming a runtime should hand these to ``runner.init_state(params,
+    opt=opt)`` so runner-specific placement (e.g. ``SpmdRunner``'s mesh
+    ``device_put``) happens on resume exactly as on a fresh start."""
+    like = jax.eval_shape(
+        lambda k: (lambda p: (p, adamw_init(p)))(M.init_params(k, cfg)),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    (params, opt), step, extra = load_checkpoint(directory, like)
+    return params, opt, step, extra
+
+
+def load_state(directory, cfg: ModelConfig, layout: Layout
+               ) -> tuple[TrainState, int, dict]:
+    """Restore a canonical checkpoint into ``layout``; returns
+    (state, step, extra).  Step and AdamW moments round-trip for every
+    runtime."""
+    params, opt, step, extra = load_canonical(directory, cfg)
+    return TrainState.from_canonical(params, layout, opt=opt), step, extra

@@ -111,6 +111,11 @@ def make_pipeline_grads_fn(cfg: ModelConfig, kind: str, p: int, m: int,
     ``grads_fn(params, tokens, labels) -> (loss, grads)`` operating on
     *canonical* (unstacked) params/grads, ready for ``adamw_update``.
 
+    This is the grads-only access path kept for the differential tests and
+    ad-hoc analysis: it re-stacks params host-side on every call.  Training
+    should go through ``repro.api.SpmdRunner``, whose fused step keeps
+    stacked params + AdamW moments mesh-resident across steps.
+
     Any of the six ``repro.core.schedule.SCHEDULES`` works; ``mesh`` must
     carry a ``stage`` axis of size ``p`` (plus ``model_axis`` for TP).
     ``tokens``/``labels`` are the stacked microbatches, shape

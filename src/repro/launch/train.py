@@ -1,15 +1,18 @@
-"""Training driver.
-
-Two runtimes share the model/optimizer/data substrates:
+"""Training driver: one loop over the ``Runner`` API for all runtimes.
 
   * ``pjit``     — data(+tensor)-parallel jit train_step (the dry-run's
                    step, executed for real at reduced scale on CPU).
   * ``pipeline`` — any of the six schedules through the single-process
                    reference executor (numerics oracle; one device).
   * ``spmd``     — any of the six schedules through the shard_map runtime
-                   on a real (stage[, model]) mesh; needs pp * tp devices
-                   (use XLA_FLAGS=--xla_force_host_platform_device_count=N
-                   for fake CPU devices).
+                   on a real (stage[, model]) mesh with in-mesh AdamW;
+                   needs pp * tp devices (use
+                   XLA_FLAGS=--xla_force_host_platform_device_count=N for
+                   fake CPU devices).
+
+Checkpoints (``--ckpt``) are canonical-layout and runtime-portable: a run
+saved under one runtime resumes under any other, including optimizer
+moments and step.
 
 Usage (CPU example scale):
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
@@ -23,20 +26,20 @@ Usage (CPU example scale):
 from __future__ import annotations
 
 import argparse
+import itertools
 import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import get_config
-from repro.core.schedule import SCHEDULES, build as build_schedule
-from repro.data import DataConfig, make_batches, microbatches
+from repro.core.schedule import SCHEDULES
+from repro.data import DataConfig, make_batches
+from repro.launch.runner import make_runner
+from repro.launch.state import load_canonical, save_state
 from repro.models import model as M
-from repro.optim import OptConfig, adamw_init, adamw_update
-from repro.pipeline.reference import pipeline_grads
+from repro.optim import OptConfig
 
 
 def main():
@@ -69,100 +72,37 @@ def main():
                    total_steps=args.steps)
     dc = DataConfig(seq_len=args.seq, global_batch=args.batch,
                     microbatches=args.microbatches)
-    key = jax.random.PRNGKey(0)
-    params = M.init_params(key, cfg)
-    opt_state = adamw_init(params)
+
+    runner = make_runner(args.runtime, cfg, oc, dc, schedule=args.schedule,
+                         pp=args.pp, tp=args.tp)
     start = 0
     if args.ckpt and Path(args.ckpt, "meta.json").exists():
-        (params, opt_state), start, _ = load_checkpoint(
-            args.ckpt, (params, opt_state))
+        params, opt, start, _ = load_canonical(args.ckpt, cfg)
+        state = runner.init_state(params, opt=opt)
         print(f"resumed from {args.ckpt} @ step {start}")
-
-    if args.runtime == "pjit":
-        period = M.period_of(cfg)
-
-        @jax.jit
-        def step_fn(params_s, opt_s, batch):
-            loss, grads = jax.value_and_grad(
-                lambda p: M.loss_fn(p, batch, cfg))(params_s)
-            p2, o2, gn = adamw_update(params_s, grads, opt_s, oc)
-            return p2, o2, loss, gn
-
-        params_s = {"embed": params["embed"],
-                    "blocks": M.stack_blocks(params["blocks"], period),
-                    "head": params["head"]}
-        opt_s = adamw_init(params_s)
-        t0 = time.time()
-        for i, batch in enumerate(make_batches(cfg, dc, args.steps)):
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params_s, opt_s, loss, gn = step_fn(params_s, opt_s, batch)
-            if (i + start) % args.log_every == 0:
-                tok_s = dc.global_batch * dc.seq_len * (i + 1) \
-                    / max(time.time() - t0, 1e-9)
-                print(f"step {i + start:5d} loss {float(loss):.4f} "
-                      f"gnorm {float(gn):.3f} tok/s {tok_s:,.0f}",
-                      flush=True)
-        params = {"embed": params_s["embed"],
-                  "blocks": M.unstack_blocks(params_s["blocks"], period),
-                  "head": params_s["head"]}
-        opt_state = opt_s
-    elif args.runtime == "spmd":
-        from jax.sharding import Mesh
-        from repro.launch.steps import make_pipeline_grads_fn
-
-        ndev = len(jax.devices())
-        if args.pp * args.tp != ndev:
-            raise SystemExit(
-                f"spmd runtime needs pp*tp == device count "
-                f"(pp={args.pp}, tp={args.tp}, devices={ndev}); set "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
-        mesh = Mesh(np.array(jax.devices()).reshape(args.pp, args.tp),
-                    ("stage", "model"))
-        mbb = dc.global_batch // args.microbatches
-        grads_fn, pl = make_pipeline_grads_fn(
-            cfg, args.schedule, args.pp, args.microbatches,
-            (mbb, dc.seq_len), mesh, params,
-            model_axis="model" if args.tp > 1 else None)
-        t0 = time.time()
-        for i, batch in enumerate(make_batches(cfg, dc, args.steps)):
-            mbs = microbatches({k: jnp.asarray(v) for k, v in batch.items()},
-                               args.microbatches)
-            tokens = jnp.stack([b["tokens" if cfg.frontend == "text"
-                                  else "embeds"] for b in mbs])
-            labels = jnp.stack([b["labels"] for b in mbs])
-            loss, grads = grads_fn(params, tokens, labels)
-            params, opt_state, gn = adamw_update(params, grads, opt_state,
-                                                 oc)
-            if (i + start) % args.log_every == 0:
-                tok_s = dc.global_batch * dc.seq_len * (i + 1) \
-                    / max(time.time() - t0, 1e-9)
-                print(f"step {i + start:5d} loss {float(loss):.4f} "
-                      f"gnorm {float(gn):.3f} tok/s {tok_s:,.0f} "
-                      f"[spmd {args.schedule} {pl.kind} p={args.pp} "
-                      f"tp={args.tp} m={args.microbatches}]", flush=True)
     else:
-        tables, pl = build_schedule(args.schedule, args.pp,
-                                    args.microbatches)
-        t0 = time.time()
-        for i, batch in enumerate(make_batches(cfg, dc, args.steps)):
-            mbs = microbatches({k: jnp.asarray(v) for k, v in batch.items()},
-                               args.microbatches)
-            loss, grads = pipeline_grads(params, mbs, tables, pl, cfg)
-            params, opt_state, gn = adamw_update(params, grads, opt_state,
-                                                 oc)
-            if (i + start) % args.log_every == 0:
-                tok_s = dc.global_batch * dc.seq_len * (i + 1) \
-                    / max(time.time() - t0, 1e-9)
-                print(f"step {i + start:5d} loss {float(loss):.4f} "
-                      f"gnorm {float(gn):.3f} tok/s {tok_s:,.0f} "
-                      f"[{args.schedule} p={args.pp} m={args.microbatches}]",
-                      flush=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        state = runner.init_state(params)
+
+    # make_batches is deterministic in dc.seed: fast-forward past the
+    # already-trained prefix so a resumed run continues the data stream
+    # instead of replaying it.
+    stream = itertools.islice(make_batches(cfg, dc, start + args.steps),
+                              start, None)
+    t0 = time.time()
+    for i, batch in enumerate(stream):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = runner.step(state, batch)
+        if (i + start) % args.log_every == 0:
+            tok_s = dc.global_batch * dc.seq_len * (i + 1) \
+                / max(time.time() - t0, 1e-9)
+            print(f"step {i + start:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['gnorm']):.3f} tok/s {tok_s:,.0f} "
+                  f"[{runner.describe}]", flush=True)
 
     if args.ckpt:
-        save_checkpoint(args.ckpt, (params, opt_state),
-                        step=start + args.steps,
-                        extra={"arch": cfg.name})
-        print(f"saved checkpoint to {args.ckpt}")
+        save_state(args.ckpt, state, extra={"arch": cfg.name})
+        print(f"saved checkpoint to {args.ckpt} @ step {int(state.step)}")
 
 
 if __name__ == "__main__":

@@ -1,2 +1,3 @@
-from repro.optim.adamw import (OptConfig, adamw_init, adamw_update,
+from repro.optim.adamw import (OptConfig, adamw_init, adamw_leaf,
+                               adamw_scalars, adamw_update,
                                clip_by_global_norm, lr_at)

@@ -59,30 +59,51 @@ def _is_matrix(x):
     return x.ndim >= 2
 
 
-def adamw_update(params, grads, state, oc: OptConfig):
-    grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
-    step = state["step"] + 1
+def adamw_scalars(oc: OptConfig, step_prev):
+    """(lr, bias-correction c1, c2) for the update taken *from* step_prev.
+
+    Shared by the host path and the in-mesh (shard_map) path in
+    ``repro.pipeline.spmd`` so their numerics agree bit-for-formula."""
+    step = step_prev + 1
     b1, b2 = oc.betas
-    lr = lr_at(oc, state["step"])
+    lr = lr_at(oc, step_prev)
     c1 = 1 - b1 ** step.astype(jnp.float32)
     c2 = 1 - b2 ** step.astype(jnp.float32)
+    return lr, c1, c2
 
-    def upd(p, g, mu, nu):
-        g = g.astype(jnp.float32)
-        mu = b1 * mu + (1 - b1) * g
-        nu = b2 * nu + (1 - b2) * jnp.square(g)
-        mhat = mu / c1
-        nhat = nu / c2
-        delta = mhat / (jnp.sqrt(nhat) + oc.eps)
-        if _is_matrix(p):
-            delta = delta + oc.weight_decay * p.astype(jnp.float32)
-        return (p - lr * delta).astype(p.dtype), mu, nu
+
+def adamw_leaf(p, g, mu, nu, lr, c1, c2, oc: OptConfig, decay: bool):
+    """One already-clipped-gradient AdamW leaf update."""
+    b1, b2 = oc.betas
+    g = g.astype(jnp.float32)
+    mu = b1 * mu + (1 - b1) * g
+    nu = b2 * nu + (1 - b2) * jnp.square(g)
+    mhat = mu / c1
+    nhat = nu / c2
+    delta = mhat / (jnp.sqrt(nhat) + oc.eps)
+    if decay:
+        delta = delta + oc.weight_decay * p.astype(jnp.float32)
+    return (p - lr * delta).astype(p.dtype), mu, nu
+
+
+def adamw_update(params, grads, state, oc: OptConfig, *, decay_mask=None):
+    """Host AdamW step.  ``decay_mask`` (optional bool pytree matching
+    ``params``) marks which leaves get weight decay; by default every
+    rank>=2 leaf does, which is only correct for *canonical* (unstacked)
+    layouts — stacked layouts must supply the mask
+    (``repro.launch.state.decay_mask``)."""
+    grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+    step = state["step"] + 1
+    lr, c1, c2 = adamw_scalars(oc, state["step"])
 
     p_flat, treedef = jax.tree.flatten(params)
     g_flat = treedef.flatten_up_to(grads)
     mu_flat = treedef.flatten_up_to(state["mu"])
     nu_flat = treedef.flatten_up_to(state["nu"])
-    out = [upd(p, g, mu, nu)
-           for p, g, mu, nu in zip(p_flat, g_flat, mu_flat, nu_flat)]
+    d_flat = ([_is_matrix(p) for p in p_flat] if decay_mask is None
+              else treedef.flatten_up_to(decay_mask))
+    out = [adamw_leaf(p, g, mu, nu, lr, c1, c2, oc, d)
+           for p, g, mu, nu, d
+           in zip(p_flat, g_flat, mu_flat, nu_flat, d_flat)]
     unflat = lambda i: jax.tree.unflatten(treedef, [o[i] for o in out])
     return unflat(0), {"mu": unflat(1), "nu": unflat(2), "step": step}, gnorm

@@ -23,6 +23,13 @@ this one runtime: table -> verified instruction IR -> slot grid -> scanned
 shard_map program.  Uniform layer stacks are required
 (``n_layers % (v * p) == 0``); TP optionally composes via a ``model`` mesh
 axis.  Heterogeneous architectures run through ``pipeline.reference``.
+
+Two entry points share the program body: ``build_pipeline_step`` returns
+gradients to the host (differential tests), while
+``build_pipeline_train_step`` additionally fuses global-norm clipping and
+the AdamW update *under* the same ``shard_map``, so stacked params and
+optimizer moments stay mesh-resident across steps (the ``SpmdRunner``
+path — no per-step host re-stacking).
 """
 from __future__ import annotations
 
@@ -38,6 +45,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.simulator import Placement, flat, parallel, vshape
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.optim.adamw import OptConfig, adamw_leaf, adamw_scalars
 from repro.pipeline import slots as SL
 from repro.tp.context import TPContext
 
@@ -53,19 +61,17 @@ def stages_per_chunk(cfg: ModelConfig, p: int, kind: str = "vshape") -> int:
     return n // n_vs
 
 
-def stack_stage_params(params, cfg: ModelConfig, p: int,
-                       kind: str = "vshape"):
-    """Canonical params -> (chunk0, chunk1) stacked with leading (p, L_vs)
-    dims + embed/head.  Stacking is in *device* order per chunk:
+def stack_stages(blocks, p: int, lvs: int, kind: str = "vshape"):
+    """Per-layer pytree list -> (chunk0, chunk1) stacked with leading
+    (p, L_vs) dims.  Stacking is in *device* order per chunk:
 
       flat      chunk0 vs s = device s; chunk1 empty ({}).
       parallel  chunk0 vs s = device s; chunk1 vs p+s = device s.
       vshape    chunk0 vs s = device s; chunk1 vs 2p-1-s = device s
                 (i.e. chunk1 stages stacked in reversed vs order).
-    """
-    lvs = stages_per_chunk(cfg, p, kind)
-    blocks = params["blocks"]
 
+    Works on any canonical per-layer list (params, AdamW moments, grads).
+    """
     def stack(layers):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
 
@@ -76,24 +82,38 @@ def stack_stage_params(params, cfg: ModelConfig, p: int,
 
     c0 = chunk_of(lambda s: s)
     if kind == "flat":
-        return c0, {}, lvs
+        return c0, {}
     if kind == "parallel":
-        return c0, chunk_of(lambda s: p + s), lvs
-    return c0, chunk_of(lambda s: 2 * p - 1 - s), lvs
+        return c0, chunk_of(lambda s: p + s)
+    return c0, chunk_of(lambda s: 2 * p - 1 - s)
+
+
+def unstack_stages(c0, c1, n_layers: int, p: int, lvs: int,
+                   kind: str = "vshape"):
+    """Inverse of ``stack_stages``: back to the per-layer pytree list."""
+    blocks = [None] * n_layers
+    for s in range(p):
+        for i in range(lvs):
+            blocks[s * lvs + i] = jax.tree.map(lambda x: x[s, i], c0)
+            if kind == "flat":
+                continue
+            vs1 = (p + s) if kind == "parallel" else (2 * p - 1 - s)
+            blocks[vs1 * lvs + i] = jax.tree.map(lambda x: x[s, i], c1)
+    return blocks
+
+
+def stack_stage_params(params, cfg: ModelConfig, p: int,
+                       kind: str = "vshape"):
+    """Canonical params -> (chunk0, chunk1, L_vs); see ``stack_stages``."""
+    lvs = stages_per_chunk(cfg, p, kind)
+    c0, c1 = stack_stages(params["blocks"], p, lvs, kind)
+    return c0, c1, lvs
 
 
 def unstack_stage_grads(g0, g1, cfg: ModelConfig, p: int, lvs: int,
                         kind: str = "vshape"):
     """Inverse of ``stack_stage_params`` for the gradient pytrees."""
-    blocks = [None] * cfg.n_layers
-    for s in range(p):
-        for i in range(lvs):
-            blocks[s * lvs + i] = jax.tree.map(lambda x: x[s, i], g0)
-            if kind == "flat":
-                continue
-            vs1 = (p + s) if kind == "parallel" else (2 * p - 1 - s)
-            blocks[vs1 * lvs + i] = jax.tree.map(lambda x: x[s, i], g1)
-    return blocks
+    return unstack_stages(g0, g1, cfg.n_layers, p, lvs, kind)
 
 
 def _zeros_like_tree(tree):
@@ -176,20 +196,13 @@ def _local_sds(tree, tp_size: int, lead: int, strip: int):
     return jax.tree_util.tree_map_with_path(one, tree)
 
 
-def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
-                        m: int, mb_shape, param_trees, *,
-                        stage_axis: str = "stage",
-                        model_axis: Optional[str] = None):
-    """Returns a jitted SPMD function
-    ``step(c0, c1, embed_p, head_p, tokens, labels) -> (loss, g0, g1,
-    g_embed, g_head)`` executing the schedule over the ``stage`` (and
-    optionally ``model``) mesh axes, for any placement kind
-    (flat / parallel / vshape).
-
-    mb_shape: (mb_batch, seq) of one microbatch.
-    param_trees: (c0, c1, embed_p, head_p) — global (unsharded) pytrees or
-    ShapeDtypeStructs; used to derive shard specs and local buffer shapes.
-    For flat placements c1 is the empty pytree ``{}``.
+def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
+                      m: int, mb_shape, param_trees, *,
+                      stage_axis: str = "stage",
+                      model_axis: Optional[str] = None):
+    """Build the per-device slot program ``run(c0, c1, embed_p, head_p,
+    tokens, labels) -> (loss, g0, g1, g_embed, g_head)`` to be wrapped in
+    ``shard_map`` — shared by the grads-only step and the fused train step.
     """
     p = pl.p
     two_chunks = pl.kind != "flat"
@@ -505,16 +518,141 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
         gh = jax.tree.map(lambda a: jax.lax.psum(a, stage_axis), carry["ah"])
         return loss, g0, g1, ge, gh
 
+    return run
+
+
+def stage_param_specs(param_trees, *, stage_axis: str = "stage",
+                      model_axis: Optional[str] = None) -> dict:
+    """PartitionSpec dict for the stage-layout state params
+    ``{"c0", "c1", "embed", "head"}`` given (c0, c1, embed, head) trees."""
+    return {"c0": tp_specs(param_trees[0], model_axis, stage_axis, lead=2),
+            "c1": tp_specs(param_trees[1], model_axis, stage_axis, lead=2),
+            "embed": tp_specs(param_trees[2], None, None),
+            "head": tp_specs(param_trees[3], model_axis, None)}
+
+
+def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
+                        m: int, mb_shape, param_trees, *,
+                        stage_axis: str = "stage",
+                        model_axis: Optional[str] = None):
+    """Returns a jitted SPMD function
+    ``step(c0, c1, embed_p, head_p, tokens, labels) -> (loss, g0, g1,
+    g_embed, g_head)`` executing the schedule over the ``stage`` (and
+    optionally ``model``) mesh axes, for any placement kind
+    (flat / parallel / vshape).
+
+    mb_shape: (mb_batch, seq) of one microbatch.
+    param_trees: (c0, c1, embed_p, head_p) — global (unsharded) pytrees or
+    ShapeDtypeStructs; used to derive shard specs and local buffer shapes.
+    For flat placements c1 is the empty pytree ``{}``.
+    """
+    run = _pipeline_program(cfg, tables, pl, mesh, m, mb_shape, param_trees,
+                            stage_axis=stage_axis, model_axis=model_axis)
     rep = P()
-    c_spec = lambda tree: tp_specs(tree, model_axis, stage_axis, lead=2)
-    e_spec = lambda tree: tp_specs(tree, None, None)
-    h_spec = lambda tree: tp_specs(tree, model_axis, None)
+    sp = stage_param_specs(param_trees, stage_axis=stage_axis,
+                           model_axis=model_axis)
     fn = shard_map(
         run, mesh=mesh,
-        in_specs=(c_spec(param_trees[0]), c_spec(param_trees[1]),
-                  e_spec(param_trees[2]), h_spec(param_trees[3]), rep, rep),
-        out_specs=(rep, c_spec(param_trees[0]), c_spec(param_trees[1]),
-                   e_spec(param_trees[2]), h_spec(param_trees[3])),
+        in_specs=(sp["c0"], sp["c1"], sp["embed"], sp["head"], rep, rep),
+        out_specs=(rep, sp["c0"], sp["c1"], sp["embed"], sp["head"]),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def _dup_factors(param_trees, mesh: Mesh, *, stage_axis: str,
+                 model_axis: Optional[str]) -> dict:
+    """Per-leaf replica counts of the *gradients* across the (stage, model)
+    mesh axes, keyed like the state params dict.  Block grads are unique per
+    stage and TP-sharded where the param is; embed/head grads come out of
+    the program psum'd over ``stage`` so every stage row holds a full copy.
+    Used to weight local sum-of-squares so the global grad norm counts every
+    element exactly once."""
+    p = mesh.shape[stage_axis]
+    tp_size = mesh.shape[model_axis] if model_axis else 1
+
+    def group(tree, lead, base):
+        def one(path, leaf):
+            name = None
+            for k in reversed(path):
+                if hasattr(k, "key"):
+                    name = k.key
+                    break
+            ax = (_tp_axis_of(name, leaf.ndim - lead)
+                  if model_axis else None)
+            return base * (1 if ax is not None else tp_size)
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+    return {"c0": group(param_trees[0], 2, 1),
+            "c1": group(param_trees[1], 2, 1),
+            "embed": jax.tree.map(lambda _: p * tp_size, param_trees[2]),
+            "head": group(param_trees[3], 0, p)}
+
+
+def build_pipeline_train_step(cfg: ModelConfig, tables, pl: Placement,
+                              mesh: Mesh, m: int, mb_shape, param_trees,
+                              oc: OptConfig, *,
+                              stage_axis: str = "stage",
+                              model_axis: Optional[str] = None):
+    """Fused pipeline *train* step: schedule execution, global-norm
+    clipping and the AdamW update all under one ``shard_map`` — stacked
+    params and optimizer moments never leave the mesh between steps.
+
+    Returns a jitted ``train(params, opt, tokens, labels) -> (params', opt',
+    loss, gnorm)`` where ``params`` is the stage-layout dict
+    ``{"c0", "c1", "embed", "head"}`` (c1 = {} for flat placements) and
+    ``opt = {"mu": like params, "nu": like params, "step": int32[]}``.
+
+    The global grad norm is assembled from per-device partial sums weighted
+    by each leaf's replica count (`_dup_factors`), then psum'd over the
+    stage (and model) axes, so clipping matches the host
+    ``optim.adamw_update`` on canonical grads up to float reassociation.
+    Weight decay applies to leaves whose *canonical* rank is >= 2 (the two
+    stacking dims of c0/c1 don't count).
+    """
+    run = _pipeline_program(cfg, tables, pl, mesh, m, mb_shape, param_trees,
+                            stage_axis=stage_axis, model_axis=model_axis)
+    sp = stage_param_specs(param_trees, stage_axis=stage_axis,
+                           model_axis=model_axis)
+    ospec = {"mu": sp, "nu": sp, "step": P()}
+    dup = _dup_factors(param_trees, mesh, stage_axis=stage_axis,
+                       model_axis=model_axis)
+    lead = {"c0": 2, "c1": 2, "embed": 0, "head": 0}
+    axes = ((stage_axis, model_axis) if model_axis else (stage_axis,))
+
+    def train(params, opt, tokens, labels):
+        loss, g0, g1, ge, gh = run(params["c0"], params["c1"],
+                                   params["embed"], params["head"],
+                                   tokens, labels)
+        grads = {"c0": g0, "c1": g1, "embed": ge, "head": gh}
+        sq = sum((jnp.sum(jnp.square(g.astype(jnp.float32))) / d
+                  for g, d in zip(jax.tree.leaves(grads),
+                                  jax.tree.leaves(dup))),
+                 start=jnp.float32(0.0))
+        gnorm = jnp.sqrt(jax.lax.psum(sq, axes))
+        scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-12))
+        lr, c1b, c2b = adamw_scalars(oc, opt["step"])
+
+        p_flat, tdef = jax.tree.flatten(params)
+        g_flat = tdef.flatten_up_to(grads)
+        mu_flat = tdef.flatten_up_to(opt["mu"])
+        nu_flat = tdef.flatten_up_to(opt["nu"])
+        ld_flat = tdef.flatten_up_to(
+            {k: jax.tree.map(lambda _: lead[k], v)
+             for k, v in params.items()})
+        out = [adamw_leaf(pp, g * scale, mu, nu, lr, c1b, c2b, oc,
+                          decay=(pp.ndim - ld) >= 2)
+               for pp, g, mu, nu, ld
+               in zip(p_flat, g_flat, mu_flat, nu_flat, ld_flat)]
+        unflat = lambda i: jax.tree.unflatten(tdef, [o[i] for o in out])
+        opt2 = {"mu": unflat(1), "nu": unflat(2), "step": opt["step"] + 1}
+        return unflat(0), opt2, loss, gnorm
+
+    rep = P()
+    fn = shard_map(
+        train, mesh=mesh,
+        in_specs=(sp, ospec, rep, rep),
+        out_specs=(sp, ospec, rep, rep),
         check_rep=False,
     )
     return jax.jit(fn)
