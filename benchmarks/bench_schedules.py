@@ -1,6 +1,3 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
-
 """Apples-to-apples cross-schedule throughput benchmark (ROADMAP item).
 
 All six ``SCHEDULES`` run through the *same* ``SpmdRunner`` (shard_map
@@ -8,70 +5,193 @@ runtime + in-mesh AdamW) on fake CPU devices, so relative wall-clock is a
 property of the schedule alone: same model, same data, same mesh, same
 fused train step.  For each kind we report
 
-  * measured wall-clock per step and per lockstep *slot* (the SPMD runtime
-    executes the slot grid rows in sequence, so ms/slot is the measured
-    analogue of the simulator's unit time);
-  * the ``core/simulator`` prediction: total time units, predicted bubble
-    fraction (pp_bubble_mean / total), and predicted relative throughput
-    normalised to the best schedule.
+  * measured wall-clock per step (best-of-``--repeats`` mean over
+    ``--steps`` steady steps, with the repeats *interleaved round-robin*
+    across kinds so slow CPU-clock drift cannot bias whichever kind is
+    measured first) for BOTH slot lowerings — the segment-
+    fused default (``fuse_slots=True``: trace-time branch dispatch, pruned
+    exchanges) and the generic one-switch-per-slot scan — plus the static
+    plan counters (``n_segments`` / ``n_dispatches`` / ``n_ppermutes``)
+    behind the difference;
+  * the ``core/simulator`` prediction: total time units with per-virtual-
+    stage unit times scaled by layers-per-vs (flat placement packs
+    ``n_layers/p`` layers into each vs, vshape/parallel pack half that, so
+    unscaled unit times are not comparable across placements), predicted
+    bubble fraction, and predicted relative throughput normalised to the
+    best schedule.
+
+``--breakdown`` additionally times ablated program variants per lowering
+and decomposes a step into
+
+  compute   — branch-body FLOPs       (t_noexchange - t_skeleton)
+  exchange  — ppermute boundary traffic (t_full - t_noexchange)
+  dispatch  — switch/scan/slot-loop machinery (t_skeleton)
+
+where ``t_skeleton`` ablates both compute and exchange but keeps the full
+dispatch structure (stub branches preserve the loss data-dependence so XLA
+cannot dead-code the skeleton).  Shares are relative to t_full.
 
 Fake-device caveat: all devices share one CPU, so measured slot time folds
 every stage's compute into one core and bubbles show up as *less* work per
-slot, not idle silicon — rank agreement (and slot counts), not absolute
-ratios, is the comparable signal.  Emits ``experiments/BENCH_schedules.json``.
+slot, not idle silicon — rank agreement (and the overhead split), not
+absolute ratios, is the comparable signal.  Emits
+``experiments/BENCH_schedules.json``.
 
-  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
-  PYTHONPATH=src python -m benchmarks.bench_schedules
+  PYTHONPATH=src python -m benchmarks.bench_schedules [--pp 2] [--m 4] \
+      [--steps 4] [--warmup 1] [--breakdown] [--kinds gpipe,zb-v]
 """
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import time
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
 
 from benchmarks.common import T_B, T_F, T_W, time_runner, write_json
 from repro.api import make_runner
 from repro.configs import get_config
 from repro.core.schedule import SCHEDULES, build
 from repro.core.simulator import StageTimes, simulate
-from repro.data import DataConfig, make_batches
+from repro.data import DataConfig, make_batches, microbatches
 from repro.models import model as M
 from repro.optim import OptConfig
 from repro.pipeline import slots as SL
+from repro.pipeline.spmd import build_pipeline_step, stack_stage_params
 
 
-def main(pp: int = 2, m: int = 4, steps: int = 4, warmup: int = 1):
+def _time_fn(fn, args, *, steps, warmup, repeats=2):
+    """Best-of-``repeats`` mean step time (min filters scheduler noise on
+    the shared-core fake-device setup)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = None
+    for _ in range(repeats):
+        t0 = time.time()
+        for _ in range(steps):
+            out = fn(*args)
+            jax.block_until_ready(out)
+        dt = (time.time() - t0) / steps
+        best = dt if best is None else min(best, dt)
+    return best
+
+
+def _breakdown(cfg, tables, pl, mesh, m, mb_shape, stacked, tokens, labels,
+               *, fuse, steps, warmup):
+    """compute/exchange/dispatch split via ablated program variants."""
+    t = {}
+    for ablate in (None, "exchange", "both"):
+        step = build_pipeline_step(cfg, tables, pl, mesh, m, mb_shape,
+                                   stacked, fuse_slots=fuse, ablate=ablate)
+        with mesh:
+            t[ablate] = _time_fn(step, (*stacked, tokens, labels),
+                                 steps=steps, warmup=warmup)
+    full, noex, skel = t[None], t["exchange"], t["both"]
+    return {
+        "t_full_s": round(full, 4),
+        "compute_s": round(max(noex - skel, 0.0), 4),
+        "exchange_s": round(max(full - noex, 0.0), 4),
+        "dispatch_s": round(skel, 4),
+        "dispatch_share": round(skel / full, 4),
+        "exchange_share": round(max(full - noex, 0.0) / full, 4),
+    }
+
+
+def main(pp: int = 2, m: int = 4, steps: int = 8, warmup: int = 1,
+         repeats: int = 3, breakdown: bool = False, kinds=None,
+         d_model: int = 128, seq_len: int = 32):
     ndev = len(jax.devices())
     assert ndev % pp == 0, f"{ndev} devices not divisible by pp={pp}"
     tp = ndev // pp
-    cfg = get_config("qwen3-4b").reduced(n_layers=4, d_model=64, n_heads=4,
-                                         vocab=256)
+    cfg = get_config("qwen3-4b").reduced(n_layers=4, d_model=d_model,
+                                         n_heads=4, vocab=256)
     oc = OptConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
-    dc = DataConfig(seq_len=32, global_batch=4 * m, microbatches=m)
+    dc = DataConfig(seq_len=seq_len, global_batch=4 * m, microbatches=m)
     batches = [{k: jnp.asarray(v) for k, v in raw.items()}
                for raw in make_batches(cfg, dc, steps)]
     params = M.init_params(jax.random.PRNGKey(0), cfg)
 
-    results = {}
-    for kind in SCHEDULES:
+    # Phase 1 — build, compile and warm every (kind, lowering) program.
+    # Timing happens in phase 2, round-robin across kinds, so slow drift of
+    # the shared fake-device CPU (turbo/thermal decay over a ~20 min run)
+    # cannot systematically favour whichever kind is measured first.
+    results, prog = {}, {}
+    for kind in kinds or SCHEDULES:
         tables, pl = build(kind, pp, m)
-        n_slots = len(SL.encode(SL.to_slots(tables, pl), pl))
+        codes = SL.encode(SL.to_slots(tables, pl), pl)
+        # Per-vs unit times must scale with how many layers one vs holds:
+        # flat packs n_layers/p per vs, vshape/parallel n_layers/(2p).
+        lvs = cfg.n_layers / pl.n_vs
         sim = simulate(tables, pl,
-                       StageTimes.uniform(pl.n_vs, t_f=T_F, t_b=T_B,
-                                          t_w=T_W, t_ar=0.0), m)
-        runner = make_runner("spmd", cfg, oc, dc, schedule=kind, pp=pp,
-                             tp=tp)
-        state = runner.init_state(params)
-        wall, state, metrics = time_runner(runner, state, batches,
-                                           warmup=warmup)
+                       StageTimes.uniform(pl.n_vs, t_f=T_F * lvs,
+                                          t_b=T_B * lvs, t_w=T_W * lvs,
+                                          t_ar=0.0), m)
+        loss = None
+        for fuse in (True, False):
+            runner = make_runner("spmd", cfg, oc, dc, schedule=kind, pp=pp,
+                                 tp=tp, fuse_slots=fuse)
+            state = runner.init_state(params)
+            state, metrics = runner.step(state, batches[0])   # compile
+            prog[(kind, fuse)] = (runner, state)
+            if fuse:
+                loss = float(metrics["loss"])
+        stats = SL.plan_stats(codes, pl.kind, fused=True)
+        stats_g = SL.plan_stats(codes, pl.kind, fused=False)
         results[kind] = {
             "placement": pl.kind,
-            "n_slots": n_slots,
-            "wall_s_per_step": round(wall, 4),
-            "wall_ms_per_slot": round(1e3 * wall / n_slots, 3),
+            "n_slots": stats["n_slots"],
+            "n_segments": stats["n_segments"],
+            "n_dispatches": stats["n_dispatches"],
+            "n_ppermutes": stats["n_ppermutes"],
+            "n_dispatches_generic": stats_g["n_dispatches"],
+            "n_ppermutes_generic": stats_g["n_ppermutes"],
             "sim_total_units": sim.total_time,
             "sim_bubble_frac": round(float(sim.pp_bubble.mean()
                                            / sim.total_time), 4),
-            "loss": round(float(metrics["loss"]), 4),
+            "loss": round(loss, 4),
+            "_tables_pl": (tables, pl),
         }
-        print(f"[{kind:10s}] {results[kind]}", flush=True)
+        print(f"[{kind:10s}] compiled ({stats})", flush=True)
+
+    # Phase 2 — interleaved timing, best-of-repeats per program.
+    walls = {}
+    for rep in range(repeats):
+        for (kind, fuse), (runner, state) in prog.items():
+            w, state, _ = time_runner(runner, state, batches, warmup=warmup)
+            prog[(kind, fuse)] = (runner, state)
+            key = (kind, fuse)
+            walls[key] = w if key not in walls else min(walls[key], w)
+        print(f"[round {rep + 1}/{repeats}] "
+              + " ".join(f"{k}{'+' if f else '-'}={walls[(k, f)]:.3f}"
+                         for k, f in walls), flush=True)
+    for kind in list(results):
+        r = results[kind]
+        tables, pl = r.pop("_tables_pl")
+        r["wall_s_per_step"] = round(walls[(kind, True)], 4)
+        r["wall_s_per_step_unfused"] = round(walls[(kind, False)], 4)
+        r["wall_ms_per_slot"] = round(1e3 * walls[(kind, True)]
+                                      / r["n_slots"], 3)
+        if breakdown:
+            mb = dc.global_batch // dc.microbatches
+            mesh = Mesh(np.array(jax.devices()).reshape(pp, tp),
+                        ("stage", "model"))
+            c0, c1, _ = stack_stage_params(params, cfg, pp, kind=pl.kind)
+            stacked = (c0, c1, params["embed"], params["head"])
+            mbs = microbatches(batches[0], m)
+            tokens = jnp.stack([b["tokens"] for b in mbs])
+            labels = jnp.stack([b["labels"] for b in mbs])
+            r["breakdown"] = {
+                "fused" if f else "generic": _breakdown(
+                    cfg, tables, pl, mesh, m, (mb, dc.seq_len), stacked,
+                    tokens, labels, fuse=f, steps=steps, warmup=warmup)
+                for f in (True, False)}
+        print(f"[{kind:10s}] {r}", flush=True)
 
     best_sim = min(r["sim_total_units"] for r in results.values())
     best_wall = min(r["wall_s_per_step"] for r in results.values())
@@ -80,11 +200,30 @@ def main(pp: int = 2, m: int = 4, steps: int = 4, warmup: int = 1):
         r["wall_rel_throughput"] = round(best_wall / r["wall_s_per_step"], 4)
     write_json("BENCH_schedules", {
         "setup": {"pp": pp, "tp": tp, "microbatches": m, "steps": steps,
-                  "arch": cfg.name, "devices": ndev,
-                  "runner": "SpmdRunner (fused in-mesh AdamW)"},
+                  "repeats": repeats,
+                  "arch": cfg.name, "d_model": d_model,
+                  "seq_len": seq_len, "devices": ndev,
+                  "runner": "SpmdRunner (fused in-mesh AdamW)",
+                  "lowering": "segment-fused (+ generic comparison)"},
         "schedules": results,
     })
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--pp", type=int, default=2)
+    ap.add_argument("--m", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--d-model", type=int, default=128, dest="d_model")
+    ap.add_argument("--seq-len", type=int, default=32, dest="seq_len")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="time ablated variants: compute/exchange/dispatch "
+                         "split per lowering")
+    ap.add_argument("--kinds", type=lambda s: s.split(","), default=None,
+                    help="comma-separated subset of schedules")
+    args = ap.parse_args()
+    main(**vars(args))

@@ -61,6 +61,12 @@ def time_runner(runner, state, batches, *, warmup: int = 1):
     import jax                       # lazy: most benchmarks are sim-only
 
     batches = list(batches)
+    if warmup >= len(batches):
+        raise ValueError(
+            f"time_runner needs at least one steady-state step: "
+            f"warmup={warmup} >= len(batches)={len(batches)}; pass more "
+            f"batches or a smaller warmup (the timer would otherwise "
+            f"report ~0 s/step)")
     t0 = time.time()
     metrics = {}
     for i, batch in enumerate(batches):
@@ -68,7 +74,7 @@ def time_runner(runner, state, batches, *, warmup: int = 1):
         jax.block_until_ready(metrics["loss"])
         if i + 1 == warmup:
             t0 = time.time()
-    steady = max(len(batches) - warmup, 1)
+    steady = len(batches) - warmup
     return (time.time() - t0) / steady, state, metrics
 
 

@@ -233,6 +233,10 @@ def stp_schedule(p: int, m: int, times: Optional[StageTimes] = None,
 
 def build(kind: str, p: int, m: int, times: Optional[StageTimes] = None
           ) -> tuple[list[list[Instr]], Placement]:
+    if p < 2:
+        raise ValueError(
+            f"pipeline schedules need p >= 2 stages, got p={p} "
+            f"(kind={kind!r}); use the pjit runtime for single-stage runs")
     if kind == "gpipe":
         return gpipe_schedule(p, m)
     if kind == "1f1b":

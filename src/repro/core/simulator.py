@@ -51,6 +51,15 @@ class Placement:
     v: int
     kind: Literal["flat", "parallel", "vshape"]
 
+    def __post_init__(self):
+        if self.p < 2:
+            raise ValueError(
+                f"Placement needs p >= 2 pipeline stages, got p={self.p}: "
+                "a single-stage pipeline has no neighbour exchange (the "
+                "SPMD executor would build empty ppermute perms and "
+                "silently zero its boundary streams); run the pjit "
+                "runtime instead")
+
     @property
     def n_vs(self) -> int:
         return self.p * self.v

@@ -116,7 +116,7 @@ class SpmdRunner:
 
     def __init__(self, cfg: ModelConfig, oc: OptConfig, kind: str, p: int,
                  m: int, mb_shape, *, tp: int = 1,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None, fuse_slots: bool = True):
         self.cfg, self.oc, self.m = cfg, oc, m
         if mesh is None:
             ndev = len(jax.devices())
@@ -145,7 +145,7 @@ class SpmdRunner:
         trees = jax.eval_shape(sds, jax.ShapeDtypeStruct((2,), jnp.uint32))
         self._step = build_pipeline_train_step(
             cfg, tables, pl, mesh, m, mb_shape, trees, oc,
-            model_axis=model_axis)
+            model_axis=model_axis, fuse_slots=fuse_slots)
         pspec = stage_param_specs(trees, model_axis=model_axis)
         self._shardings = {
             "params": jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
@@ -178,14 +178,21 @@ class SpmdRunner:
 
 def make_runner(runtime: str, cfg: ModelConfig, oc: OptConfig,
                 dc: DataConfig, *, schedule: str = "stp", pp: int = 2,
-                tp: int = 1, mesh: Optional[Mesh] = None) -> Runner:
-    """Factory over the three runtimes ('pjit' | 'pipeline' | 'spmd')."""
+                tp: int = 1, mesh: Optional[Mesh] = None,
+                fuse_slots: bool = True) -> Runner:
+    """Factory over the three runtimes ('pjit' | 'pipeline' | 'spmd').
+
+    ``fuse_slots`` (spmd only) selects the segment-fused slot lowering
+    (static branch dispatch + pruned exchanges); pass ``False`` to force
+    the generic one-switch-per-slot scan, e.g. for differential debugging.
+    """
     if runtime == "pjit":
         return PjitRunner(cfg, oc)
     if runtime == "spmd":
         mb = dc.global_batch // dc.microbatches
         return SpmdRunner(cfg, oc, schedule, pp, dc.microbatches,
-                          (mb, dc.seq_len), tp=tp, mesh=mesh)
+                          (mb, dc.seq_len), tp=tp, mesh=mesh,
+                          fuse_slots=fuse_slots)
     if runtime == "pipeline":
         return ReferenceRunner(cfg, oc, schedule, pp, dc.microbatches)
     raise ValueError(f"unknown runtime {runtime!r}")

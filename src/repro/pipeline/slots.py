@@ -25,6 +25,8 @@ different devices:
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import numpy as np
 
 from repro.core.simulator import Instr, Placement, instr_dep_keys
@@ -56,6 +58,24 @@ WIRING = {
     "parallel": dict(up=("x0", "x1"), dn=("g0", "g1"), wrap=True),
     "vshape": dict(up=("x0", "g1"), dn=("x1", "g0"), wrap=False),
 }
+
+# Which boundary stream (if any) each branch role *emits* into.  Roles not
+# listed are device-local (turn/loss/embed-grad) or nops.  This is the
+# static-liveness table behind the fused lowering's ppermute elision: a
+# stream is dead in a slot segment iff no device's role emits into it.
+EMITS = {
+    "f0": "x0", "f0_embed": "x0",     # chunk-0 activation, +1 hop
+    "f0_send1": "x1", "f1": "x1",     # chunk-1 activation (wrap / +-1 hop)
+    "b0": "g0", "b0_loss": "g0",      # chunk-0 gradient, -1 hop
+    "b1_send0": "g0",                 # parallel wrap back into chunk 0
+    "b1": "g1", "b1_loss": "g1",      # chunk-1 gradient
+}
+
+# Which mb column of the 6-wide code row carries the emitting phase's
+# microbatch index, per stream: activations travel with the sender's F-mb,
+# gradients with the sender's B-mb.
+_MB_COL = {"x0": 1, "x1": 1, "g0": 3, "g1": 3}
+_ROLE_COL = {"x0": 0, "x1": 0, "g0": 2, "g1": 2}
 
 
 def f_role(pl: Placement, vs: int, d: int) -> str:
@@ -130,7 +150,20 @@ def to_slots(tables, pl: Placement):
             remaining -= 1
             progressed = True
         if not progressed:
-            raise RuntimeError("slot conversion stalled")
+            lines = []
+            for d in range(p):
+                if ptr[d] >= len(tables[d]):
+                    lines.append(f"  device {d}: done ({ptr[d]} instrs)")
+                    continue
+                ins = tables[d][ptr[d]]
+                missing = [key for key, _ in instr_dep_keys(ins, n_vs)
+                           if key not in level]
+                lines.append(f"  device {d}: ptr={ptr[d]}/{len(tables[d])} "
+                             f"pending {ins} missing deps {missing}")
+            raise RuntimeError(
+                "slot conversion stalled — some instruction's dependency is "
+                "never produced (malformed schedule table):\n"
+                + "\n".join(lines))
     n_slots = max(dev_level) + 1
     grid = [[None] * n_slots for _ in range(p)]
     for d in range(p):
@@ -160,5 +193,175 @@ def encode(grid, pl: Placement) -> np.ndarray:
             if ins.w is not None:
                 codes[t, d, 4] = wb.index(w_role(pl, ins.w[0], d))
                 codes[t, d, 5] = ins.w[1]
-    # p == 1 cannot happen (p >= 2 enforced by caller)
+    # p >= 2 is enforced at Placement construction / schedule.build: a
+    # single-stage "pipeline" would build empty ppermute perms and silently
+    # zero the boundary streams.
     return codes
+
+
+# ---------------------------------------------------------------------------
+# Fused-lowering plan: maximal constant-role segments of the slot grid.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Segment:
+    """A maximal run of slots [start, stop) whose per-device branch-role
+    rows (f_code, b_code, w_code) repeat with a fixed ``period``.  Within a
+    segment the ``lax.switch`` selection is static per (device, phase):
+    only microbatch indices vary iteration-to-iteration, so the executor
+    can lower the whole run as one scan whose body unrolls the period's
+    phases — dispatching once per phase over that phase's distinct role
+    rows (zero dispatches when all devices share one row) and exchanging
+    only that phase's statically-live boundary streams.  ``period == 1`` is
+    the constant-role case; period > 1 captures steady-state braids (1f1b
+    and the zero-bubble family alternate roles every slot, so without
+    periodic detection every steady slot would inline as its own
+    straight-line segment and the traced program grows with ``m``)."""
+    start: int
+    stop: int
+    phases: tuple        # per-phase tuple of per-device (f, b, w) rows
+    live: tuple          # per-phase ((up streams), (dn streams)) pairs
+
+    @property
+    def length(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def period(self) -> int:
+        return len(self.phases)
+
+    @property
+    def n_iters(self) -> int:
+        return self.length // self.period
+
+    # -- period-1 convenience views (constant-role segments) --------------
+    @property
+    def rows(self) -> tuple:
+        assert self.period == 1
+        return self.phases[0]
+
+    @property
+    def live_up(self) -> tuple:
+        assert self.period == 1
+        return self.live[0][0]
+
+    @property
+    def live_dn(self) -> tuple:
+        assert self.period == 1
+        return self.live[0][1]
+
+    @property
+    def n_rows(self) -> int:
+        assert self.period == 1
+        return len(set(self.phases[0]))
+
+
+def _live_streams(rows, kind: str):
+    """Streams some device emits into, split by exchange direction."""
+    fb, bb = F_BRANCHES[kind], B_BRANCHES[kind]
+    emitted = set()
+    for fc, bc, wc in rows:
+        emitted.add(EMITS.get(fb[fc]))
+        emitted.add(EMITS.get(bb[bc]))
+    w = WIRING[kind]
+    return (tuple(s for s in w["up"] if s in emitted),
+            tuple(s for s in w["dn"] if s in emitted))
+
+
+def segment_grid(codes: np.ndarray, kind: str, *,
+                 max_period: int = 4) -> list:
+    """Partition encoded slot codes (n_slots, p, 6) into maximal
+    :class:`Segment` runs of ``period``-repeating per-device role rows.
+
+    Greedy longest-match: at each position the constant run (period 1) is
+    extended first; a larger period up to ``max_period`` wins only when its
+    (period-truncated) run covers strictly more slots and repeats at least
+    twice — a single repetition is just straight-line code, not a loop."""
+    n_slots, p = codes.shape[0], codes.shape[1]
+    rows = [tuple(tuple(int(c) for c in codes[t, d, 0::2])
+                  for d in range(p)) for t in range(n_slots)]
+
+    def mk(start, stop, period):
+        phases = tuple(rows[start + j] for j in range(period))
+        return Segment(start, stop, phases,
+                       tuple(_live_streams(ph, kind) for ph in phases))
+
+    segs, t = [], 0
+    while t < n_slots:
+        best_k = 1
+        best_l = 1
+        while t + best_l < n_slots and rows[t + best_l] == rows[t]:
+            best_l += 1
+        for k in range(2, max_period + 1):
+            if t + 2 * k > n_slots:
+                break
+            run = 0
+            while (t + run < n_slots
+                   and rows[t + run] == rows[t + run % k]):
+                run += 1
+            run -= run % k
+            if run >= 2 * k and run > best_l:
+                best_k, best_l = k, run
+        segs.append(mk(t, t + best_l, best_k))
+        t += best_l
+    return segs
+
+
+def recv_rows(codes: np.ndarray, seg: Segment, kind: str, m: int
+              ) -> tuple:
+    """Static receive rows for the fused exchange, one array per phase of
+    shape (seg.n_iters, p, n_live): the mb row each device writes a
+    received live-stream payload into, ordered [live_up..., live_dn...].
+    Row ``m`` (the scratch row) when the device has no emitting upstream —
+    statically replacing the generic path's transmitted validity flags."""
+    w = WIRING[kind]
+    p = codes.shape[1]
+    fb, bb = F_BRANCHES[kind], B_BRANCHES[kind]
+    names = (fb, None, bb)           # indexed by _ROLE_COL
+    out = []
+    for ph, (up, dn) in zip(seg.phases, seg.live):
+        j = len(out)
+        streams = list(up) + list(dn)
+        mbc = codes[seg.start + j:seg.stop:seg.period]   # (n_iters, p, 6)
+        arr = np.full((seg.n_iters, p, len(streams)), m, np.int32)
+        for i, s in enumerate(streams):
+            shift = 1 if s in up else -1
+            rcol, mcol = _ROLE_COL[s], _MB_COL[s]
+            vocab = names[rcol]
+            for d in range(p):
+                src = d - shift
+                if w["wrap"]:
+                    src %= p
+                elif not (0 <= src < p):
+                    continue
+                if EMITS.get(vocab[ph[src][rcol // 2]]) != s:
+                    continue
+                arr[:, d, i] = mbc[:, src, mcol]
+        out.append(arr)
+    return tuple(out)
+
+
+def plan_stats(codes: np.ndarray, kind: str, *, fused: bool) -> dict:
+    """Static per-step cost counters of a lowering plan: how many
+    ``lax.switch`` dispatches and ppermute'd tensors one pipeline step
+    executes.  The generic lowering pays 3 switches per slot and, per slot,
+    every wired stream as a (payload, mb-flag) pair; the fused lowering
+    pays at most one switch per slot (none in single-row segments) and one
+    payload tensor per statically-live stream."""
+    n_slots, p = codes.shape[0], codes.shape[1]
+    n_streams = sum(len(WIRING[kind][k]) for k in ("up", "dn"))
+    if not fused:
+        return {"n_slots": n_slots, "n_segments": n_slots,
+                "n_dispatches": 3 * n_slots,
+                "n_ppermutes": 2 * n_streams * n_slots}
+    segs = segment_grid(codes, kind)
+    return {
+        "n_slots": n_slots,
+        "n_segments": len(segs),
+        "n_dispatches": sum(
+            s.n_iters * sum(1 for ph in s.phases if len(set(ph)) > 1)
+            for s in segs),
+        "n_ppermutes": sum(
+            s.n_iters * sum(len(up) + len(dn) for up, dn in s.live)
+            for s in segs),
+    }

@@ -199,15 +199,42 @@ def _local_sds(tree, tp_size: int, lead: int, strip: int):
 def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                       m: int, mb_shape, param_trees, *,
                       stage_axis: str = "stage",
-                      model_axis: Optional[str] = None):
+                      model_axis: Optional[str] = None,
+                      fuse: bool = True, ablate: Optional[str] = None):
     """Build the per-device slot program ``run(c0, c1, embed_p, head_p,
     tokens, labels) -> (loss, g0, g1, g_embed, g_head)`` to be wrapped in
     ``shard_map`` — shared by the grads-only step and the fused train step.
+
+    ``fuse`` selects the lowering of the static slot grid:
+
+      False — generic: one scan over all slots, three ``lax.switch``
+              dispatches per slot (F/B/W), every wired boundary stream
+              exchanged every slot as a (payload, mb-flag) ppermute pair.
+      True  — fused (default): the grid is partitioned into maximal
+              constant-role *segments* (``slots.segment_grid``).  Each
+              segment lowers as its own scan whose body composes the three
+              branch bodies at trace time (role codes are Python ints per
+              segment), leaving at most ONE ``lax.switch`` per slot — over
+              the segment's distinct per-device role rows, and none at all
+              when the row is uniform — and exchanges only the segment's
+              statically-live streams as bare payloads (receive rows are
+              read from the static grid, so the flag channel disappears).
+
+    Both lowerings share the same branch bodies, so they are numerically
+    identical up to float reassociation (pinned by the differential tests).
+
+    ``ablate`` builds benchmark-only variants for the ``--breakdown`` cost
+    split (numerics are meaningless): ``"exchange"`` elides every ppermute;
+    ``"compute"`` replaces branch bodies with buffer-touching stubs that
+    keep the dispatch + exchange structure (and a loss data-dependence so
+    XLA cannot dead-code it); ``"both"`` applies both.
     """
+    assert ablate in (None, "exchange", "compute", "both")
+    do_exchange = ablate not in ("exchange", "both")
     p = pl.p
     two_chunks = pl.kind != "flat"
     grid = SL.to_slots(tables, pl)
-    codes = jnp.asarray(SL.encode(grid, pl))            # (L, p, 6)
+    codes_np = SL.encode(grid, pl)                      # (L, p, 6) static
     wiring = SL.WIRING[pl.kind]
     act_streams = tuple(s for s in ("x0", "x1")
                         if s in wiring["up"] + wiring["dn"])
@@ -468,6 +495,47 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                      b1_loss=b1_loss)
         wdefs = dict(w_nop=w_nop, w0=w0, w0_head=w0_head, w1=w1,
                      w1_head=w1_head)
+
+        if ablate in ("compute", "both"):
+            # --breakdown stubs: per-role buffer touch + emit, preserving
+            # the dispatch arms, stream liveness and a loss data-dependence
+            # (every exchange chain terminates in `loss`, so XLA keeps the
+            # switch + ppermute skeleton) while dropping the model math.
+            def _touch(out, src, emit=None, store=None, to_loss=False):
+                def fn(carry, mb):
+                    val = _read(carry[src], mb)
+                    if store:
+                        carry = dict(carry,
+                                     **{store: _write(carry[store], mb,
+                                                      val)})
+                    if to_loss:
+                        carry = dict(carry, loss=carry["loss"].at[mb].add(
+                            jnp.sum(val)))
+                    if emit is None:
+                        return (carry, out()) if out else carry
+                    return carry, out(**{emit: (val, jnp.int32(1))})
+                return fn
+
+            fdefs = dict(
+                f_nop=f_nop,
+                f0=_touch(acts_out, "x0", emit="x0"),
+                f0_embed=_touch(acts_out, "x0", emit="x0"),
+                f0_turn=_touch(acts_out, "x0", store="x1"),
+                f0_send1=_touch(acts_out, "x0", emit="x1"),
+                f0_loss=_touch(acts_out, "x0", to_loss=True),
+                f1=_touch(acts_out, "x1", emit="x1"),
+                f1_loss=_touch(acts_out, "x1", to_loss=True))
+            bdefs = dict(
+                b_nop=b_nop,
+                b0=_touch(grads_out, "g0", emit="g0"),
+                b0_embed=_touch(grads_out, "g0", to_loss=True),
+                b0_loss=_touch(grads_out, "g0", emit="g0"),
+                b1=_touch(grads_out, "g1", emit="g1"),
+                b1_turn=_touch(grads_out, "g1", store="g0"),
+                b1_send0=_touch(grads_out, "g1", emit="g0"),
+                b1_loss=_touch(grads_out, "g1", emit="g1"))
+            wdefs = {k: w_nop for k in wdefs}
+
         f_branches = [fdefs[n] for n in SL.F_BRANCHES[pl.kind]]
         b_branches = [bdefs[n] for n in SL.B_BRANCHES[pl.kind]]
         w_branches = [wdefs[n] for n in SL.W_BRANCHES[pl.kind]]
@@ -480,13 +548,16 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
         else:
             perm_up = [(s, s + 1) for s in range(p - 1)]
             perm_dn = [(s, s - 1) for s in range(1, p)]
+        perm_of = {"up": perm_up, "dn": perm_dn}
 
-        def slot(carry, codes_t):
+        def generic_slot(carry, codes_t):
             my = codes_t[me]
             fmb, bmb_, wmb = my[1], my[3], my[5]
             carry, acts = jax.lax.switch(my[0], f_branches, carry, fmb)
             carry, grads = jax.lax.switch(my[2], b_branches, carry, bmb_)
             carry = jax.lax.switch(my[4], w_branches, carry, wmb)
+            if not do_exchange:
+                return carry, None
             # exchange.  mb indices are sent +1 so that the zeros a device
             # receives when it has no upstream decode as "invalid" and land
             # in the scratch row m.
@@ -509,7 +580,83 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                                  **{s: _write(carry[s], row, val)})
             return carry, None
 
-        carry, _ = jax.lax.scan(slot, carry, codes)
+        def run_segment(carry, seg):
+            """Fused lowering of one periodic segment: branch bodies
+            composed at trace time from each phase's static role rows, one
+            scan over its iterations (mb indices + static receive rows are
+            the only scanned values), dead streams elided per phase from
+            the exchange.  The scan body unrolls the segment's ``period``
+            phases, so steady-state braids (F,BW,F,BW,... in 1f1b and the
+            zero-bubble family) trace one loop body instead of one inlined
+            program per slot."""
+            k = seg.period
+
+            def arm_of(fc, bc, wc):
+                ff = f_branches[fc]
+                bf = b_branches[bc]
+                wf = w_branches[wc]
+
+                def arm(carry, mb3):
+                    carry, acts = ff(carry, mb3[0])
+                    carry, grads = bf(carry, mb3[1])
+                    carry = wf(carry, mb3[2])
+                    return (carry, tuple(v for v, _ in acts),
+                            tuple(v for v, _ in grads))
+                return arm
+
+            arms, row_id = [], []
+            for ph in seg.phases:
+                distinct = list(dict.fromkeys(ph))
+                arms.append([arm_of(*r) for r in distinct])
+                row_id.append(jnp.asarray(
+                    np.array([distinct.index(r) for r in ph], np.int32)))
+
+            def one_phase(carry, j, mb_t, rr_t):
+                # mb_t: (p, 3), rr_t: (p, n_live of phase j)
+                my = mb_t[me]
+                if len(arms[j]) == 1:
+                    carry, acts, grads = arms[j][0](carry, my)
+                else:
+                    carry, acts, grads = jax.lax.switch(
+                        row_id[j][me], arms[j], carry, my)
+                if not do_exchange:
+                    return carry
+                vals = dict(zip(act_streams, acts))
+                vals.update(zip(grad_streams, grads))
+                i = 0
+                for names, perm in ((seg.live[j][0], perm_of["up"]),
+                                    (seg.live[j][1], perm_of["dn"])):
+                    for s in names:
+                        rx = jax.lax.ppermute(vals[s], stage_axis, perm)
+                        carry = dict(carry, **{s: _write(carry[s],
+                                                         rr_t[me, i], rx)})
+                        i += 1
+                return carry
+
+            mbs = codes_np[seg.start:seg.stop, :, 1::2]
+            rr = SL.recv_rows(codes_np, seg, pl.kind, m)
+            if seg.n_iters == 1:
+                for j in range(k):
+                    carry = one_phase(carry, j, jnp.asarray(mbs[j]),
+                                      jnp.asarray(rr[j][0]))
+                return carry
+
+            def seg_body(carry, xs):
+                for j in range(k):
+                    carry = one_phase(carry, j, xs[j], xs[k + j])
+                return carry, None
+
+            xs = (tuple(jnp.asarray(mbs[j::k]) for j in range(k))
+                  + tuple(jnp.asarray(r) for r in rr))
+            carry, _ = jax.lax.scan(seg_body, carry, xs)
+            return carry
+
+        if fuse:
+            for seg in SL.segment_grid(codes_np, pl.kind):
+                carry = run_segment(carry, seg)
+        else:
+            carry, _ = jax.lax.scan(generic_slot, carry,
+                                    jnp.asarray(codes_np))
         loss = jax.lax.psum(carry["loss"].sum() * scale, stage_axis)
         g0 = jax.tree.map(lambda a: a[None], carry["a0"])
         g1 = (jax.tree.map(lambda a: a[None], carry["a1"])
@@ -534,7 +681,9 @@ def stage_param_specs(param_trees, *, stage_axis: str = "stage",
 def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                         m: int, mb_shape, param_trees, *,
                         stage_axis: str = "stage",
-                        model_axis: Optional[str] = None):
+                        model_axis: Optional[str] = None,
+                        fuse_slots: bool = True,
+                        ablate: Optional[str] = None):
     """Returns a jitted SPMD function
     ``step(c0, c1, embed_p, head_p, tokens, labels) -> (loss, g0, g1,
     g_embed, g_head)`` executing the schedule over the ``stage`` (and
@@ -545,9 +694,14 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     param_trees: (c0, c1, embed_p, head_p) — global (unsharded) pytrees or
     ShapeDtypeStructs; used to derive shard specs and local buffer shapes.
     For flat placements c1 is the empty pytree ``{}``.
+
+    ``fuse_slots`` selects the fused segment lowering (default) vs the
+    generic one-switch-per-slot scan; ``ablate`` builds the benchmark-only
+    cost-breakdown variants (see ``_pipeline_program``).
     """
     run = _pipeline_program(cfg, tables, pl, mesh, m, mb_shape, param_trees,
-                            stage_axis=stage_axis, model_axis=model_axis)
+                            stage_axis=stage_axis, model_axis=model_axis,
+                            fuse=fuse_slots, ablate=ablate)
     rep = P()
     sp = stage_param_specs(param_trees, stage_axis=stage_axis,
                            model_axis=model_axis)
@@ -593,7 +747,8 @@ def build_pipeline_train_step(cfg: ModelConfig, tables, pl: Placement,
                               mesh: Mesh, m: int, mb_shape, param_trees,
                               oc: OptConfig, *,
                               stage_axis: str = "stage",
-                              model_axis: Optional[str] = None):
+                              model_axis: Optional[str] = None,
+                              fuse_slots: bool = True):
     """Fused pipeline *train* step: schedule execution, global-norm
     clipping and the AdamW update all under one ``shard_map`` — stacked
     params and optimizer moments never leave the mesh between steps.
@@ -611,7 +766,8 @@ def build_pipeline_train_step(cfg: ModelConfig, tables, pl: Placement,
     stacking dims of c0/c1 don't count).
     """
     run = _pipeline_program(cfg, tables, pl, mesh, m, mb_shape, param_trees,
-                            stage_axis=stage_axis, model_axis=model_axis)
+                            stage_axis=stage_axis, model_axis=model_axis,
+                            fuse=fuse_slots)
     sp = stage_param_specs(param_trees, stage_axis=stage_axis,
                            model_axis=model_axis)
     ospec = {"mu": sp, "nu": sp, "step": P()}

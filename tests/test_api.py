@@ -180,9 +180,12 @@ print("OK", errs)
 """
 
 
+@pytest.mark.slow
 def test_spmd_runner_matches_host_adamw():
     """SpmdRunner.step (AdamW under shard_map) == old grads_fn + host
-    adamw_update to within 1e-5 over 3 steps, on a real 2-device mesh."""
+    adamw_update to within 1e-5 over 3 steps, on a real 2-device mesh.
+    Slow tier: the subprocess compiles two full shard_map train programs
+    (minutes on 1 CPU core)."""
     r = subprocess.run(
         [sys.executable, "-c", EQUIV_SCRIPT], capture_output=True,
         text=True, cwd=str(REPO),

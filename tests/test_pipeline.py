@@ -158,14 +158,11 @@ def _spmd_case(kind, p, tp, m, ndev=4, with_ref=True):
 
 
 @pytest.mark.parametrize("kind,p,tp,ndev", [
-    ("stp", 4, 1, 4),          # pure PP, 4 stages
     ("stp", 2, 2, 4),          # synergistic TP x PP (the paper's setting)
-    ("zb-v", 2, 2, 4),
-    ("stp-memeff", 2, 2, 4),
 ])
 def test_spmd_executor_multidevice(kind, p, tp, ndev):
-    # no reference-executor pass here: keeps the unmarked (fast-tier) cases
-    # at their original cost; the slow tier runs the full three-way diff.
+    # no reference-executor pass here: keeps the unmarked (fast-tier) case
+    # at its original cost; the slow tier runs the full three-way diff.
     _spmd_case(kind, p, tp, m=6, ndev=ndev, with_ref=False)
 
 
@@ -178,7 +175,10 @@ def test_spmd_executor_multidevice(kind, p, tp, ndev):
     ("1f1b-i", 4, 1, 8),       # parallel placement (wrap-around ring)
     ("1f1b-i", 2, 2, 4),
     ("zb-v", 4, 1, 6),         # vshape at full stage depth
+    ("zb-v", 2, 2, 6),
+    ("stp", 4, 1, 6),          # pure PP, 4 stages
     ("stp-memeff", 4, 1, 6),
+    ("stp-memeff", 2, 2, 6),
 ])
 def test_spmd_executor_all_schedules(kind, p, tp, m):
     """Differential conformance over every placement family: the SPMD
@@ -186,3 +186,72 @@ def test_spmd_executor_all_schedules(kind, p, tp, m):
     monolithic jax.grad oracle for every schedule kind on a real 4-device
     (stage x model) mesh."""
     _spmd_case(kind, p, tp, m)
+
+
+# ---------------------------------------------------------------------------
+# Fused (segment) lowering vs generic one-switch-per-slot scan.
+# ---------------------------------------------------------------------------
+
+FUSE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_config
+from repro.core.schedule import build
+from repro.models import model as M
+from repro.pipeline.spmd import build_pipeline_step, stack_stage_params
+
+p, m = 2, {m}
+tables, pl = build("{kind}", p, m)
+cfg = get_config("qwen3-4b").reduced(n_layers=pl.n_vs, d_model=64,
+                                     n_heads=4, vocab=128)
+key = jax.random.PRNGKey(0)
+params = M.init_params(key, cfg)
+b, s = 2, 16
+ks = jax.random.split(key, m)
+tokens = jnp.stack([jax.random.randint(k, (b, s), 0, cfg.vocab)
+                    for k in ks])
+labels = jnp.stack([jax.random.randint(k, (b, s), 0, cfg.vocab)
+                    for k in ks])
+mesh = Mesh(np.array(jax.devices()).reshape(p, 1), ("stage", "model"))
+c0, c1, lvs = stack_stage_params(params, cfg, p, kind=pl.kind)
+stacked = (c0, c1, params["embed"], params["head"])
+outs = {{}}
+for fuse in (False, True):
+    step = build_pipeline_step(cfg, tables, pl, mesh, m, (b, s), stacked,
+                               fuse_slots=fuse)
+    with mesh:
+        outs[fuse] = [np.asarray(x) for x in jax.tree.leaves(
+            step(*stacked, tokens, labels))]
+err = max(float(np.max(np.abs(a - g)) / (np.max(np.abs(g)) + 1e-9))
+          for a, g in zip(outs[True], outs[False]))
+assert err < 1e-5, err
+print("OK", err)
+"""
+
+
+def _fuse_case(kind, m=4):
+    out = _run_sub(FUSE_SCRIPT.format(kind=kind, m=m))
+    assert "OK" in out
+
+
+@pytest.mark.parametrize("kind", ["1f1b"])
+def test_fused_matches_generic(kind):
+    """Loss + every grad from the segment-fused lowering must match the
+    generic one-switch-per-slot scan to < 1e-5.  One cheap flat-placement
+    case rides in the fast tier (1f1b at m=4 already contains a period-2
+    steady-state segment, so the periodic scan path is exercised); the
+    slow tier completes the matrix (all six kinds, so every placement
+    family's wiring is pinned, with m=8 on the vshape kinds so their
+    braids fold into periodic segments too)."""
+    _fuse_case(kind)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind,m", [("gpipe", 4), ("1f1b-i", 4),
+                                    ("zb-v", 8), ("stp", 8),
+                                    ("stp-memeff", 8)])
+def test_fused_matches_generic_slow(kind, m):
+    """Remaining schedule kinds of the fused-vs-generic differential."""
+    _fuse_case(kind, m)

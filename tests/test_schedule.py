@@ -185,3 +185,86 @@ def test_replay_matches_generation():
     r2 = simulate(tables, pl, t, m)
     assert r1.total_time == r2.total_time
     sch.validate(tables, pl, m)
+
+
+def test_pipeline_requires_two_stages():
+    """p=1 must fail loudly at both entry points (a single-stage pipeline
+    has no neighbour exchange; the SPMD executor would silently zero its
+    boundary streams)."""
+    from repro.core.simulator import flat
+    with pytest.raises(ValueError, match="p >= 2"):
+        sch.build("gpipe", 1, 4)
+    with pytest.raises(ValueError, match="p >= 2"):
+        flat(1)
+
+
+def test_segment_grid_pins_gpipe():
+    """The fused lowering's segment partition of the gpipe p=2 m=4 grid:
+    maximal constant-role runs with statically-dead streams elided (the
+    forward half only ships activations up, the backward half only ships
+    gradients down)."""
+    from repro.pipeline import slots as SL
+    tables, pl = sch.build("gpipe", 2, 4)
+    codes = SL.encode(SL.to_slots(tables, pl), pl)
+    segs = SL.segment_grid(codes, pl.kind)
+    assert [(s.start, s.stop) for s in segs] == \
+        [(0, 1), (1, 4), (4, 5), (5, 6), (6, 9), (9, 10)]
+    assert [(sorted(s.live_up), sorted(s.live_dn)) for s in segs] == \
+        [(["x0"], []), (["x0"], []), ([], []),
+         ([], ["g0"]), ([], ["g0"]), ([], [])]
+    stats = SL.plan_stats(codes, pl.kind, fused=True)
+    gen = SL.plan_stats(codes, pl.kind, fused=False)
+    assert stats == {"n_slots": 10, "n_segments": 6, "n_dispatches": 10,
+                     "n_ppermutes": 8}
+    assert gen["n_dispatches"] == 30 and gen["n_ppermutes"] == 40
+
+
+def test_segment_grid_pins_zbv():
+    """ZB-V's p=2 m=4 grid has no repeated rows — every segment is length
+    one (inlined straight-line code, no scan) — and exactly one slot is
+    role-uniform across devices (no switch at all).  Liveness pruning still
+    cuts the exchanged tensors by 13x vs the generic (payload, flag) wiring."""
+    from repro.pipeline import slots as SL
+    tables, pl = sch.build("zb-v", 2, 4)
+    codes = SL.encode(SL.to_slots(tables, pl), pl)
+    segs = SL.segment_grid(codes, pl.kind)
+    assert len(codes) == 26
+    assert all(s.length == 1 for s in segs)
+    assert sum(1 for s in segs if s.n_rows == 1) == 1
+    stats = SL.plan_stats(codes, pl.kind, fused=True)
+    gen = SL.plan_stats(codes, pl.kind, fused=False)
+    assert stats["n_dispatches"] == 25 and stats["n_ppermutes"] == 16
+    assert gen["n_dispatches"] == 78 and gen["n_ppermutes"] == 208
+
+
+def test_segment_grid_periodic_steady_state():
+    """Steady-state braids fold into periodic segments, so the traced
+    program stops growing with m: 1f1b's F,BW alternation is one period-2
+    scan covering 2(m-p) slots, and the vshape kinds' braids fold at m=8+.
+    Dispatch/ppermute counts are per-executed-slot and must not change."""
+    from repro.pipeline import slots as SL
+
+    tables, pl = sch.build("1f1b", 2, 16)
+    codes = SL.encode(SL.to_slots(tables, pl), pl)
+    segs = SL.segment_grid(codes, pl.kind)
+    per = [s for s in segs if s.period > 1]
+    assert [(s.start, s.stop, s.period) for s in per] == [(3, 31, 2)]
+    (s,) = per
+    assert s.n_iters == 14 and len(s.phases) == 2
+    # phase liveness is pruned per phase, not unioned over the segment
+    assert [tuple(map(tuple, lv)) for lv in s.live] == \
+        [((), ()), (("x0",), ("g0",))]
+    # receive rows come per phase, one (n_iters, p, n_live) array each
+    rr = SL.recv_rows(codes, s, pl.kind, m=16)
+    assert [a.shape for a in rr] == [(14, 2, 0), (14, 2, 2)]
+    # the scan repeats the slot work, so per-step counters are unchanged
+    # by the periodic folding: 2 braid slots per iteration
+    stats = SL.plan_stats(codes, pl.kind, fused=True)
+    assert stats["n_segments"] == 7          # independent of m
+    assert stats["n_slots"] == 34
+
+    for kind, m in (("stp", 8), ("zb-v", 8), ("stp-memeff", 8)):
+        tables, pl = sch.build(kind, 2, m)
+        codes = SL.encode(SL.to_slots(tables, pl), pl)
+        assert any(s.period > 1
+                   for s in SL.segment_grid(codes, pl.kind)), kind
