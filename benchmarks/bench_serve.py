@@ -1,0 +1,142 @@
+"""Serving benchmark: Poisson open-loop load against the continuous-batching
+engine, three architecture families, TP-sharded on fake CPU devices.
+
+Per family (attention / sliding-window / SSM):
+
+  1. **Differential gate** — ``Engine.generate`` greedy outputs must match
+     the token-at-a-time reference oracle exactly (same tokens, every
+     request); a serving engine that returns different tokens has no
+     business being benchmarked.
+  2. **Poisson load** — requests arrive by an open-loop exponential clock
+     (fixed seed), the engine admits/batches/retires them tick by tick, and
+     we report decode throughput, TTFT and end-to-end latency percentiles,
+     plus queue/occupancy maxima from the engine's own metrics.
+
+Fake-device caveat: both TP ranks share one CPU core, so absolute tok/s is
+meaningless; the comparable signal is that all families serve under the
+same engine with sane queueing behaviour.  Emits
+``experiments/BENCH_serve.json``.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--requests 12] \
+      [--rate 20] [--gen 8] [--tp 2]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from pathlib import Path
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs + small load (CI-sized)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean arrival rate, requests/second")
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--tp", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args()
+
+
+ARGS = _parse()
+# Device count must be pinned before jax initializes.
+os.environ.setdefault(
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={ARGS.tp}")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax                                                    # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from benchmarks.common import write_json                      # noqa: E402
+from repro.configs import get_config                          # noqa: E402
+from repro.models import model as M                           # noqa: E402
+from repro.serve import (Engine, EngineConfig, reference,     # noqa: E402
+                         stacked_params)
+
+FAMILIES = [("attention", "qwen3-4b"),
+            ("sliding-window", "gemma3-12b"),
+            ("ssm", "xlstm-125m")]
+
+
+def _engine(cfg, params, args):
+    return Engine(cfg, params, EngineConfig(
+        tp=args.tp, data=1, rows=4, blocks=48, block_size=8,
+        max_seq=96, max_queue=64, prefill_group=2, prefill_bucket=8))
+
+
+def _differential(cfg, params, eng, args, rng):
+    plen = 16
+    prompts = rng.integers(0, cfg.vocab,
+                           size=(4, plen)).astype(np.int32)
+    st = stacked_params(cfg, params)
+    ref = np.asarray(reference.generate(cfg, st, prompts, args.gen,
+                                        max_seq=plen + args.gen + 1))
+    outs = eng.generate(list(prompts), args.gen)
+    return all(np.array_equal(outs[i], ref[i]) for i in range(len(outs)))
+
+
+def _poisson_load(cfg, eng, args, rng):
+    """Open-loop Poisson arrivals: submission times are drawn up front from
+    an exponential clock; the driver submits whatever has 'arrived' by
+    wall-clock each tick and steps the engine until everything drains."""
+    n = args.requests
+    gaps = rng.exponential(1.0 / args.rate, size=n)
+    arrivals = np.cumsum(gaps)
+    plens = rng.choice([8, 16], size=n)
+    prompts = [rng.integers(0, cfg.vocab, size=p).astype(np.int32)
+               for p in plens]
+
+    # Warmup both prompt-length buckets + decode, then reset the clock.
+    for p in (8, 16):
+        eng.generate([np.zeros(p, np.int32)], 2)
+    eng.reset_metrics()
+
+    t0 = time.perf_counter()
+    nxt = 0
+    completed = 0
+    while completed < n - eng.metrics.rejected:
+        now = time.perf_counter() - t0
+        while nxt < len(arrivals) and arrivals[nxt] <= now:
+            eng.submit(prompts[nxt], args.gen)
+            nxt += 1
+        if eng.scheduler.depth or eng.pool.active_rows:
+            completed += len(eng.step())
+        elif nxt < len(arrivals):
+            time.sleep(min(0.002, arrivals[nxt] - now))
+    return eng.metrics.summary()
+
+
+def main():
+    args = ARGS
+    rng = np.random.default_rng(args.seed)
+    results = {"tp": args.tp, "requests": args.requests, "rate": args.rate,
+               "gen": args.gen, "families": {}}
+    all_match = True
+    for family, arch in FAMILIES:
+        cfg = get_config(arch).reduced(n_layers=2, d_model=128, n_heads=4,
+                                       vocab=512)
+        params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+        eng = _engine(cfg, params, args)
+        match = _differential(cfg, params, eng, args, rng)
+        all_match &= match
+        load = _poisson_load(cfg, eng, args, rng)
+        results["families"][family] = {
+            "arch": arch, "greedy_match": bool(match), **load}
+        print(f"[{family:14s}] match={match} "
+              f"completed={load['completed']} "
+              f"tok/s={load['tokens_per_s']:.1f} "
+              f"ttft p50={load['ttft_ms']['p50']:.1f}ms "
+              f"p99={load['ttft_ms']['p99']:.1f}ms "
+              f"latency p50={load['latency_ms']['p50']:.1f}ms", flush=True)
+    write_json("BENCH_serve", results)
+    assert all_match, "engine greedy outputs diverged from the reference"
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,16 @@ def _schedules():
                    check=True, env=env)
 
 
+def _serve():
+    # subprocess for the same reason; bench_serve pins its own XLA_FLAGS
+    import os
+    import subprocess
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    subprocess.run([sys.executable, "-m", "benchmarks.bench_serve",
+                    "--smoke"], check=True, env=env)
+
+
 ALL = {
     "table1": table1_theory.main,
     "fig1": fig1_tp_overlap.main,
@@ -32,6 +42,7 @@ ALL = {
     "table4": table4_mfu.main,
     "roofline": roofline.main,
     "schedules": _schedules,
+    "serve": _serve,
 }
 
 

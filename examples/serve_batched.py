@@ -1,17 +1,15 @@
-"""Batched serving: prefill + autoregressive decode with KV ring buffers /
-SSM states across three architecture families.
+"""Continuous-batching serving across three architecture families: the
+``repro.serve.Engine`` holds params + paged KV / SSM-state pools mesh-resident
+and streams requests through a batched prefill and per-tick decode.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
-import time
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.serve import generate
 from repro.models import model as M
+from repro.serve import Engine, EngineConfig
 
 
 def main():
@@ -19,21 +17,24 @@ def main():
         cfg = get_config(arch).reduced(n_layers=2, d_model=128, n_heads=4,
                                        vocab=512)
         params = M.init_params(jax.random.PRNGKey(0), cfg)
-        stacked = {"embed": params["embed"],
-                   "blocks": M.stack_blocks(params["blocks"],
-                                            M.period_of(cfg)),
-                   "head": params["head"]}
         b, plen, gen = 4, 16, 12
-        prompts = jax.random.randint(jax.random.PRNGKey(1), (b, plen), 0,
-                                     cfg.vocab)
-        t0 = time.time()
-        out = generate(cfg, stacked, prompts, gen, max_seq=plen + gen + 1)
-        dt = time.time() - t0
-        assert out.shape == (b, plen + gen)
+        prompts = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(1), (b, plen), 0,
+                               cfg.vocab), np.int32)
+        eng = Engine(cfg, params, EngineConfig(
+            rows=4, blocks=32, block_size=8, max_seq=64, prefill_group=2))
+        # Warmup compiles prefill+decode, then measure a clean batch.
+        eng.generate([prompts[0]], 2)
+        eng.reset_metrics()
+        outs = eng.generate(list(prompts), gen)
+        s = eng.metrics.summary()
+        assert all(o.shape == (plen + gen,) for o in outs)
         kinds = {l.mixer for l in cfg.layers}
         print(f"{arch:28s} mixers={sorted(kinds)} "
-              f"{b}x{gen} tokens in {dt:5.1f}s "
-              f"sample={list(np.asarray(out[0, -6:]))}")
+              f"{s['completed']} reqs {s['gen_tokens']} tokens "
+              f"{s['tokens_per_s']:7.1f} tok/s "
+              f"ttft p50 {s['ttft_ms']['p50']:6.1f}ms "
+              f"sample={list(outs[0][-6:])}")
 
 
 if __name__ == "__main__":

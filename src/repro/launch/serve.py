@@ -1,55 +1,44 @@
-"""Serving driver: batched prefill + autoregressive decode with KV/state
-caches (ring buffers for sliding-window layers, recurrent states for SSMs).
+"""Serving driver: continuous-batching engine CLI over the ``repro.serve``
+subsystem (mesh-resident params, paged KV pool, batched prefill).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 --tp 2 --data 2 --check
+
+Timing protocol: one warmup request per prompt-length bucket triggers jit
+compilation of the prefill/decode programs, results are synced
+(``block_until_ready`` happens implicitly — the engine pulls every tick's
+tokens to host), metrics are reset, and only then is the measured batch
+submitted.  The old driver timed a single ``time.time()`` span around the
+first call, so it mostly measured XLA compilation.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.tp.context import TPContext
-
-
-def generate(cfg, params_stacked, prompts, max_new: int, *,
-             max_seq: int = 512, greedy: bool = True, key=None):
-    """prompts (b, p) int32 -> (b, p+max_new).  Prefill via repeated decode
-    steps (teacher-forced), then sample; one jitted step serves both."""
-    b, plen = prompts.shape
-    caches = M.init_caches_stacked(cfg, b, max_seq)
-
-    @jax.jit
-    def step(caches, tok, pos):
-        nxt, logits, caches = M.decode_step(
-            params_stacked, caches, {"tokens": tok[:, None]}, pos, cfg)
-        return caches, nxt, logits
-
-    toks = [prompts[:, i] for i in range(plen)]
-    nxt = None
-    for pos in range(plen):
-        caches, nxt, _ = step(caches, toks[pos], jnp.int32(pos))
-    out = list(toks)
-    cur = nxt
-    for pos in range(plen, plen + max_new):
-        out.append(cur)
-        caches, cur, _ = step(caches, cur, jnp.int32(pos))
-    return jnp.stack(out, axis=1)
+from repro.serve import Engine, EngineConfig, reference, stacked_params
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (2 layers, d_model=128, vocab=512)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--rows", type=int, default=8)
+    ap.add_argument("--blocks", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--check", action="store_true",
+                    help="compare greedy output against the token-at-a-time "
+                         "reference oracle")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -63,21 +52,40 @@ def main():
 
     key = jax.random.PRNGKey(0)
     params = M.init_params(key, cfg)
-    period = M.period_of(cfg)
-    stacked = {"embed": params["embed"],
-               "blocks": M.stack_blocks(params["blocks"], period),
-               "head": params["head"]}
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
-    t0 = time.time()
-    out = generate(cfg, stacked, prompts, args.gen,
-                   max_seq=args.prompt_len + args.gen + 1)
-    dt = time.time() - t0
-    assert out.shape == (args.batch, args.prompt_len + args.gen)
-    assert not np.any(np.isnan(np.asarray(out, np.float32)))
-    print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print("sample:", np.asarray(out[0, -args.gen:]))
+    max_seq = args.prompt_len + args.gen + 1
+    eng = Engine(cfg, params, EngineConfig(
+        tp=args.tp, data=args.data, rows=args.rows, blocks=args.blocks,
+        block_size=args.block_size, max_seq=max(64, 2 * max_seq),
+        prefill_group=min(args.batch, max(2, args.rows // 2))))
+    prompts = np.asarray(
+        jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab),
+        np.int32)
+
+    # Warmup: same prompt-length bucket as the measured batch, so both the
+    # prefill and decode programs are compiled before the clock starts.
+    eng.generate([prompts[0]], min(args.gen, 2))
+    eng.reset_metrics()
+
+    outs = eng.generate(list(prompts), args.gen)
+    s = eng.metrics.summary()
+    assert s["completed"] == args.batch
+    for o in outs:
+        assert o.shape == (args.prompt_len + args.gen,)
+    print(f"completed {s['completed']} requests ({s['gen_tokens']} tokens) "
+          f"in {s['elapsed_s']:.2f}s ({s['tokens_per_s']:.1f} tok/s)")
+    print(f"ttft p50 {s['ttft_ms']['p50']:.1f}ms  "
+          f"latency p50 {s['latency_ms']['p50']:.1f}ms  "
+          f"ticks {s['ticks']}")
+    print("sample:", outs[0][-args.gen:])
+
+    if args.check:
+        st = stacked_params(cfg, params)
+        ref = np.asarray(reference.generate(cfg, st, prompts, args.gen,
+                                            max_seq=max_seq))
+        ok = all(np.array_equal(outs[i], ref[i]) for i in range(args.batch))
+        print("reference check:", "MATCH" if ok else "MISMATCH")
+        if not ok:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

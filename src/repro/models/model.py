@@ -554,6 +554,165 @@ def prefill_step(params, batch, cfg: ModelConfig,
     return logits[:, 0]
 
 
+# ---------------------------------------------------------------------------
+# Continuous-batching serve path: per-row positions + paged KV pool.
+# The single-request helpers above share one position scalar across the
+# batch; the entry points below are what `repro.serve.engine` drives — every
+# row carries its own absolute position (-1 = inactive) and attention layers
+# address a pool of fixed-size KV blocks through a per-row block table.
+# ---------------------------------------------------------------------------
+
+SSM_STEP = {"mamba": ssm.mamba_step, "mlstm": ssm.mlstm_step,
+            "slstm": ssm.slstm_step}
+
+
+def rope_rows(pos, hd: int, theta: float):
+    """RoPE rows for per-request positions: pos (b,) -> cos/sin (b, hd/2).
+    Same formula as ``units.rope_at`` so serve matches the decode oracle."""
+    inv = 1.0 / theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = pos.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope_rows(x, cos, sin):
+    """x (b, h, 1, hd); cos/sin (b, hd/2) — per-row single-token rotation."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[:, None, None, :]
+    s = sin[:, None, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def attn_ring_blocks(spec: LayerSpec, block_size: int, max_blocks: int) -> int:
+    """Block-table width a layer actually addresses.  Global layers walk the
+    full table; sliding-window layers reuse a ring of just enough blocks to
+    cover ``window`` live positions plus the block being overwritten."""
+    if spec.window is None:
+        return max_blocks
+    return min(max_blocks, -(-spec.window // block_size) + 1)
+
+
+def attn_decode_paged(params, tp: TPContext, x_ln, x_res, pool, table, pos,
+                      spec: LayerSpec, cfg: ModelConfig):
+    """One-token attention against a paged KV pool.
+
+    pool: {"k","v": (nb, kvh_local, bs, hd), "pos": (nb, bs)} — the physical
+    block pool (pos holds absolute positions, -1 = empty slot).
+    table (b, W) int32: per-row physical block ids; entries beyond a row's
+    allocation (and every entry of an inactive row) point at the garbage
+    block, whose slots stay masked.  pos (b,): the token's absolute
+    position, -1 for inactive rows (their write lands in the garbage block
+    and is recorded as empty).  Same softmax math as ``_attn_decode`` so the
+    paged path matches the contiguous ring oracle token-for-token."""
+    b = x_ln.shape[0]
+    hd = cfg.hd
+    bs = pool["k"].shape[2]
+    q = jnp.einsum("bsd,df->bsf", x_ln, params["wq"])
+    k = jnp.einsum("bsd,df->bsf", x_ln, params["wk"])
+    v = jnp.einsum("bsd,df->bsf", x_ln, params["wv"])
+    nh_l, kv_l = q.shape[-1] // hd, k.shape[-1] // hd
+    qh = q.reshape(b, 1, nh_l, hd).transpose(0, 2, 1, 3)
+    kh = k.reshape(b, 1, kv_l, hd).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, 1, kv_l, hd).transpose(0, 2, 1, 3)
+    if spec.qk_norm:
+        qh = ag.rmsnorm(params["qg"], qh)
+        kh = ag.rmsnorm(params["kg"], kh)
+    if cfg.use_rope:
+        cos, sin = rope_rows(jnp.maximum(pos, 0), hd, cfg.rope_theta)
+        qh = apply_rope_rows(qh, cos, sin)
+        kh = apply_rope_rows(kh, cos, sin)
+    ring = attn_ring_blocks(spec, bs, table.shape[1])
+    tab = table[:, :ring]                                  # (b, R)
+    p_eff = jnp.maximum(pos, 0)
+    logical = (p_eff // bs) % ring
+    blk = jnp.take_along_axis(tab, logical[:, None], axis=1)[:, 0]
+    off = p_eff % bs
+    ck = pool["k"].at[blk, :, off].set(kh[:, :, 0].astype(pool["k"].dtype))
+    cv = pool["v"].at[blk, :, off].set(vh[:, :, 0].astype(pool["v"].dtype))
+    cpos = pool["pos"].at[blk, off].set(pos.astype(jnp.int32))
+    gk = ck[tab]                                           # (b, R, kvh, bs, hd)
+    gv = cv[tab]
+    T = ring * bs
+    gk = gk.transpose(0, 2, 1, 3, 4).reshape(b, kv_l, T, hd)
+    gv = gv.transpose(0, 2, 1, 3, 4).reshape(b, kv_l, T, hd)
+    gpos = cpos[tab].reshape(b, T)
+    g = nh_l // kv_l
+    qg = qh.reshape(b, kv_l, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg,
+                   gk.astype(jnp.float32)) * hd ** -0.5
+    ok = (gpos >= 0) & (gpos <= pos[:, None])
+    if spec.window is not None:
+        ok &= (pos[:, None] - gpos) < spec.window
+    okb = ok[:, None, None, :]
+    s = jnp.where(okb, s, -1e30)
+    m = jax.lax.stop_gradient(s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m)
+    p = jnp.where(okb, p, 0.0)
+    o = jnp.einsum("bkgt,bktd->bkgd", p, gv.astype(jnp.float32)) \
+        / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    a = o.reshape(b, nh_l, 1, hd).transpose(0, 2, 1, 3) \
+        .reshape(b, 1, nh_l * hd).astype(x_ln.dtype)
+    part = jnp.einsum("bsd,df->bsf", a, params["wo"])
+    y = tp.fuse_residual(part, x_res)
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+def _sel_rows(mask, new, old):
+    m = mask.reshape(mask.shape + (1,) * (new.ndim - 1))
+    return jnp.where(m, new.astype(old.dtype), old)
+
+
+def decode_layer_paged(params, tp: TPContext, x, cache, table, pos, active,
+                       spec: LayerSpec, cfg: ModelConfig):
+    """Continuous-batching decode through one layer.  x (b, 1, d); pos (b,)
+    per-row absolute positions; active (b,) bool.  Attention layers write
+    through the paged pool (inactive rows land in the garbage block); SSM
+    layers carry per-row state slots, frozen where inactive."""
+    x_ln, _ = units.prenorm_fwd(params["ln1"], x, cfg)
+    if spec.mixer == "attn":
+        y1, new_cache = attn_decode_paged(params["mixer"], tp, x_ln, x,
+                                          cache, table, pos, spec, cfg)
+    else:
+        y1, nc = SSM_STEP[spec.mixer](params["mixer"], tp, x_ln, x, cache,
+                                      cfg)
+        new_cache = jax.tree.map(lambda n, o: _sel_rows(active, n, o),
+                                 nc, cache)
+    if spec.mlp == "none":
+        return y1, new_cache
+    x_ln2, _ = units.prenorm_fwd(params["ln2"], y1, cfg)
+    if spec.mlp == "moe":
+        y2 = moe_decode(params["mlp"], tp, x_ln2, y1, cfg)
+    else:
+        y2, _ = units.mlp_fwd(params["mlp"], tp, x_ln2, y1, spec, cfg)
+    return y2, new_cache
+
+
+def prefill_layer(params, tp: TPContext, x, rope, lengths, spec: LayerSpec,
+                  cfg: ModelConfig):
+    """Whole-prompt prefill through one layer — ONE forward over the padded
+    prompt, not a teacher-forced decode loop.  Attention runs full-sequence
+    flash attention and extracts the rope'd/normed KV (``attn_prefill``);
+    recurrent mixers replay their decode step under a single masked
+    ``lax.scan`` (``ssm.prefill_scan``) so the handed-off state is exact.
+    Returns (y (b, s, d), kv {"k","v"} (b, kvh, s, hd) | final ssm state)."""
+    x_ln, _ = units.prenorm_fwd(params["ln1"], x, cfg)
+    if spec.mixer == "attn":
+        y1, kv = attn_prefill(params["mixer"], tp, x_ln, x, rope, spec, cfg)
+    else:
+        init = ssm.init_state_like(spec.mixer, params["mixer"], x.shape[0])
+        y1, kv = ssm.prefill_scan(SSM_STEP[spec.mixer], params["mixer"], tp,
+                                  x_ln, x, init, lengths, cfg)
+    if spec.mlp == "none":
+        return y1, kv
+    x_ln2, _ = units.prenorm_fwd(params["ln2"], y1, cfg)
+    if spec.mlp == "moe":
+        y2 = moe_decode(params["mlp"], tp, x_ln2, y1, cfg)
+    else:
+        y2, _ = units.mlp_fwd(params["mlp"], tp, x_ln2, y1, spec, cfg)
+    return y2, kv
+
+
 def attn_prefill(params, tp, x_ln, x_res, rope, spec, cfg):
     """Forward with KV-cache extraction (inference prefill)."""
     cos, sin = rope

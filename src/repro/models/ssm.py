@@ -59,6 +59,59 @@ def chunked_scan(step, init, xs, chunk: int = SCAN_CHUNK):
     return carry, ys
 
 
+def init_state_like(mixer: str, params, batch: int):
+    """Fresh decode state for one layer, with dims derived from the *param
+    shapes* (not the config) so it is correct for TP-sharded per-rank params
+    inside ``shard_map`` as well as for full params on the host."""
+    if mixer == "mamba":
+        cp = params["core"]
+        di, n = cp["A_log"].shape
+        ck = cp["conv_w"].shape[-1]
+        return {"h": jnp.zeros((batch, di, n), jnp.float32),
+                "conv": jnp.zeros((batch, ck - 1, di), jnp.float32)}
+    if mixer == "mlstm":
+        nh, hd = params["wq"].shape[0], params["wq"].shape[1]
+        return {"C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+                "n": jnp.zeros((batch, nh, hd), jnp.float32),
+                "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+    if mixer == "slstm":
+        du = params["w_x"].shape[-1] // 4
+        z = jnp.zeros((batch, du), jnp.float32)
+        return {"c": z, "n": z, "h": z,
+                "m": jnp.full((batch, du), -1e30, jnp.float32)}
+    raise ValueError(mixer)
+
+
+def prefill_scan(step_fn, params, tp: TPContext, x_ln, x_res, state, lengths,
+                 cfg: ModelConfig):
+    """Whole-prompt prefill for a recurrent mixer in ONE ``lax.scan`` of its
+    single-token decode step — the serve engine's batched-prefill path.
+
+    Because the scanned body *is* the decode step, the handed-off state is
+    bit-identical to replaying the prompt token-at-a-time (the oracle in
+    ``repro.serve.reference``).  ``lengths`` (b,) freezes each row's state
+    past its (right-padded) prompt, so padding to a shared bucket length
+    never perturbs the state; outputs at padded positions are garbage and
+    the caller masks them.  Returns (y (b, s, d), final_state)."""
+    b, s, _ = x_ln.shape
+    tm = lambda a: jnp.moveaxis(a, 1, 0)[:, :, None]      # (s, b, 1, d)
+
+    def body(st, inp):
+        xl_t, xr_t, t = inp
+        y, st2 = step_fn(params, tp, xl_t, xr_t, st, cfg)
+        keep = t < lengths
+        st = jax.tree.map(
+            lambda new, old: jnp.where(
+                keep.reshape((b,) + (1,) * (new.ndim - 1)),
+                new.astype(old.dtype), old),
+            st2, st)
+        return st, y[:, 0]
+
+    state, ys = jax.lax.scan(
+        body, state, (tm(x_ln), tm(x_res), jnp.arange(s, dtype=jnp.int32)))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
 # ---------------------------------------------------------------------------
 # Mamba (selective SSM).
 # ---------------------------------------------------------------------------

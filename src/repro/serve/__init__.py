@@ -1,0 +1,16 @@
+"""Mesh-resident continuous-batching serving engine.
+
+``Engine`` holds params, paged KV pools and SSM state slots on a
+``("data", "model")`` mesh and streams requests through jitted batched
+prefill + per-tick decode; ``serve.reference.generate`` is the
+token-at-a-time differential oracle.
+"""
+from repro.serve.engine import (Engine, EngineConfig, blocks_needed,
+                                stacked_params)
+from repro.serve.kvpool import Admission, PagedPool, PoolConfig
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["Engine", "EngineConfig", "blocks_needed", "stacked_params",
+           "Admission", "PagedPool", "PoolConfig", "ServeMetrics",
+           "Request", "Scheduler"]

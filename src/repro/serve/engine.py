@@ -1,0 +1,553 @@
+"""Mesh-resident continuous-batching serve engine.
+
+One ``("data", "model")`` mesh holds the model weights, the paged KV pools
+and the SSM state slots for the whole engine lifetime; requests stream
+through two jitted ``shard_map`` programs:
+
+* **prefill** — ONE forward over the (bucket-padded) prompt batch: flash
+  attention for attention layers with the rope'd/normed KV scattered into
+  the rows' allocated blocks, and a single masked ``lax.scan`` of the decode
+  step for recurrent mixers (bit-identical state handoff, see
+  ``ssm.prefill_scan``).  Emits each row's first generated token.
+* **decode** — one token for *every* active row per tick
+  (``model.decode_layer_paged``): per-row positions, block-table addressed
+  paged KV with ring reuse for sliding-window layers, frozen state for
+  inactive rows.  Greedy next-token via a vocab-parallel head + tiled
+  ``all_gather`` + argmax (bitwise identical per column under TP).
+
+Tensor parallelism reuses ``TPContext`` in unit mode on the ``model`` axis,
+exactly as ``pipeline/spmd.py`` does for training — Megatron col/row rules
+per mixer (sLSTM layers run replicated: their four interleaved gate blocks
+do not shard, see DESIGN.md).  Rows and KV blocks shard over ``data``;
+prefill compute is replicated across data shards with owner-masked scatters
+(non-owner writes are dropped), so a prefill group may mix rows from
+different shards.
+
+The host side (this class) is the scheduler loop: each ``step()`` admits
+queued requests that fit the pool, prefills them *while previously admitted
+rows keep decoding*, decodes every active row, and retires rows that hit
+their token budget — freed blocks return to the pool immediately and are
+reused by later admissions (the next prefill clears their stale slot
+positions on-device).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models import ssm, units
+from repro.models.config import LayerSpec, ModelConfig
+from repro.serve.kvpool import PagedPool, PoolConfig
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import Request, Scheduler
+from repro.tp.context import TPContext
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    tp: int = 1               # model-axis size (TP)
+    data: int = 1             # data-axis size (rows/blocks shard over this)
+    rows: int = 8             # concurrent sequences (global over data shards)
+    blocks: int = 64          # usable KV blocks per data shard
+    block_size: int = 8       # tokens per KV block
+    max_seq: int = 256        # prompt + generation ceiling per request
+    max_queue: int = 64       # queued (not yet admitted) request ceiling
+    prefill_group: int = 2    # fixed prefill batch (padded with dummy rows)
+    prefill_bucket: int = 16  # prompt-length padding granularity
+
+
+# ---------------------------------------------------------------------------
+# TP sharding rules per mixer (serve-local: the training-side ``_tp_axis_of``
+# has no rules for the mamba core, and would wrongly shard sLSTM's w_down).
+# ---------------------------------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "wg", "wu", "w1", "w_in_x", "w_in_z",
+        "w_upx", "w_upz"}
+_ROW = {"wo", "wd", "w2", "w_out", "w_down"}
+
+
+def _axis_of(mixer: str, name: str) -> Optional[int]:
+    if mixer == "slstm":
+        return None               # replicated: gate blocks interleave
+    if mixer == "mlstm" and name in ("wq", "wk", "wv"):
+        return -3                 # (nh, hd, hd): shard heads
+    if name in ("wi", "wf"):
+        return -2                 # (nh, hd) gate heads
+    if name in _COL:
+        return -1
+    if name in _ROW:
+        return -2
+    if name in ("conv_w", "w_x", "A_log"):
+        return -2                 # mamba core: inner dim leads
+    if name in ("w_dt",):
+        return -1                 # (r, di): di-split output
+    if name in ("conv_b", "dt_bias", "D"):
+        return -1                 # (di,) per-channel vectors
+    return None                   # norms, biases, router, slstm core
+
+
+def _leaf_name(path) -> Optional[str]:
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            return k.key
+    return None
+
+
+def serve_param_specs(tree, mixer: str, model_axis: Optional[str]):
+    """PartitionSpec tree for one (period-stacked) layer's params."""
+    def one(path, leaf):
+        spec = [None] * leaf.ndim
+        ax = _axis_of(mixer, _leaf_name(path)) if model_axis else None
+        if ax is not None:
+            spec[leaf.ndim + ax] = model_axis
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def serve_cache_specs(spec: LayerSpec, tree):
+    """PartitionSpec tree for one period position's cache: leading (reps,)
+    replicated, rows/blocks over ``data``, head-or-inner dims over ``model``
+    (sLSTM states replicate across model ranks along with their params)."""
+    mixer = spec.mixer
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        s = [None] * leaf.ndim
+        s[1] = "data"
+        if mixer == "attn" and name in ("k", "v"):
+            s[2] = "model"
+        elif mixer == "mamba":
+            if name == "h":
+                s[2] = "model"        # (reps, rows, di, n)
+            elif name == "conv":
+                s[3] = "model"        # (reps, rows, ck-1, di)
+        elif mixer == "mlstm":
+            s[2] = "model"            # C/n/m all lead with nh
+        return P(*s)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def _head_specs(tree):
+    def one(path, leaf):
+        if _leaf_name(path) == "w_lm":
+            return P(None, "model")   # vocab-parallel head
+        return P()
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def stacked_params(cfg: ModelConfig, params):
+    """Canonical params -> the period-stacked layout the serve paths scan."""
+    return {"embed": params["embed"],
+            "blocks": M.stack_blocks(params["blocks"], M.period_of(cfg)),
+            "head": params["head"]}
+
+
+def blocks_needed(cfg: ModelConfig, block_size: int, width: int,
+                  plen: int, max_new: int) -> int:
+    """KV blocks a request must hold: the max over attention layers of the
+    blocks that layer will address for ``plen + max_new`` positions —
+    ``ceil(L/bs)`` for global layers, the ring size for windowed ones.
+    SSM-only architectures need zero (their state slot is per-row, not
+    pooled) — real per-family admission differences."""
+    L = plen + max_new
+    need = 0
+    for spec in set(cfg.layers):
+        if spec.mixer != "attn":
+            continue
+        ring = M.attn_ring_blocks(spec, block_size, width)
+        need = max(need, min(-(-L // block_size), ring))
+    return need
+
+
+def _validate(cfg: ModelConfig, ecfg: EngineConfig) -> None:
+    if cfg.frontend != "text" or not cfg.causal:
+        raise ValueError(f"{cfg.name}: serve engine decodes causal text only")
+    tp = ecfg.tp
+    if tp <= 1:
+        return
+    checks = [("vocab", cfg.vocab)]
+    for spec in set(cfg.layers):
+        if spec.mixer == "attn":
+            checks += [("n_heads", cfg.n_heads), ("kv_heads", cfg.kv_heads)]
+        elif spec.mixer == "mamba":
+            checks += [("mamba inner dim", cfg.ssm_expand * cfg.d_model)]
+        elif spec.mixer == "mlstm":
+            checks += [("n_heads", cfg.n_heads)]
+        if spec.mlp in ("gated", "plain"):
+            checks += [("d_ff", cfg.d_ff)]
+        elif spec.mlp == "moe":
+            checks += [("moe d_ff", cfg.moe.d_ff)]
+    for what, dim in checks:
+        if dim % tp:
+            raise ValueError(f"{cfg.name}: {what}={dim} not divisible by "
+                             f"tp={tp}")
+
+
+class Engine:
+    """Continuous-batching serve engine over canonical ``init_params``-style
+    parameters.  ``submit`` requests, drive with ``step()``/``run()``, or use
+    ``generate`` for a synchronous batch."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 devices=None):
+        _validate(cfg, ecfg)
+        bucket = max(ecfg.prefill_bucket, ecfg.block_size)
+        bucket = -(-bucket // ecfg.block_size) * ecfg.block_size
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self._bucket = bucket
+        self.period = M.period_of(cfg)
+        self.specs = cfg.layers[: self.period]
+        self.reps = cfg.n_layers // self.period
+        self._tps = [TPContext() if s.mixer == "slstm"
+                     else TPContext("model", ecfg.tp) for s in self.specs]
+
+        devs = list(devices if devices is not None else jax.devices())
+        n_dev = ecfg.data * ecfg.tp
+        if len(devs) < n_dev:
+            raise ValueError(f"need {n_dev} devices (data={ecfg.data} x "
+                             f"tp={ecfg.tp}), have {len(devs)}")
+        self.mesh = Mesh(np.array(devs[:n_dev]).reshape(ecfg.data, ecfg.tp),
+                         ("data", "model"))
+
+        self.pool = PagedPool(PoolConfig(ecfg.rows, ecfg.blocks,
+                                         ecfg.block_size, ecfg.max_seq,
+                                         ecfg.data))
+        self.scheduler = Scheduler(ecfg.max_queue)
+        self.metrics = ServeMetrics()
+
+        # --- place params + caches mesh-resident --------------------------
+        st = stacked_params(cfg, params)
+        self._bspecs = [serve_param_specs(st["blocks"][i],
+                                          self.specs[i].mixer, "model")
+                        for i in range(self.period)]
+        self._espec = jax.tree.map(lambda _: P(), st["embed"])
+        self._hspec = _head_specs(st["head"])
+        nsh = lambda spec: jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec)
+        self.params = {
+            "blocks": [jax.device_put(st["blocks"][i], nsh(self._bspecs[i]))
+                       for i in range(self.period)],
+            "embed": jax.device_put(st["embed"], nsh(self._espec)),
+            "head": jax.device_put(st["head"], nsh(self._hspec)),
+        }
+        self._cspecs = [serve_cache_specs(self.specs[i], c)
+                        for i, c in enumerate(self._cache_shapes())]
+        self.caches = [jax.device_put(c, nsh(self._cspecs[i]))
+                       for i, c in enumerate(self._cache_shapes())]
+
+        self._sh_rows = NamedSharding(self.mesh, P("data"))
+        self._sh_rep = NamedSharding(self.mesh, P())
+
+        # --- host row state ------------------------------------------------
+        self._pos = np.full(ecfg.rows, -1, np.int32)   # next write position
+        self._tok = np.zeros(ecfg.rows, np.int32)      # token to feed there
+        self._row_req: list = [None] * ecfg.rows
+        self._next_rid = 0
+        self.requests = {}                             # rid -> Request
+
+        self._decode = self._build_decode()
+        self._prefills = {}                            # bucket len -> jit fn
+
+    # ------------------------------------------------------------------
+    # device programs
+    # ------------------------------------------------------------------
+
+    def _cache_shapes(self):
+        """Host-side zero caches in global (unsharded) shapes, f32 KV/state
+        so the paged path is bit-comparable to an f32-cache reference."""
+        e, cfg = self.ecfg, self.cfg
+        out = []
+        for i in range(self.period):
+            spec, reps, rows = self.specs[i], self.reps, e.rows
+            if spec.mixer == "attn":
+                nb = e.data * (e.blocks + 1)
+                kv = (reps, nb, cfg.kv_heads, e.block_size, cfg.hd)
+                out.append({"k": jnp.zeros(kv, jnp.float32),
+                            "v": jnp.zeros(kv, jnp.float32),
+                            "pos": jnp.full((reps, nb, e.block_size), -1,
+                                            jnp.int32)})
+            elif spec.mixer == "mamba":
+                di = cfg.ssm_expand * cfg.d_model
+                out.append({"h": jnp.zeros((reps, rows, di, cfg.ssm_state),
+                                           jnp.float32),
+                            "conv": jnp.zeros((reps, rows, cfg.ssm_conv - 1,
+                                               di), jnp.float32)})
+            elif spec.mixer == "mlstm":
+                du, nh, hd = ssm.mlstm_dims(cfg)
+                out.append({"C": jnp.zeros((reps, rows, nh, hd, hd),
+                                           jnp.float32),
+                            "n": jnp.zeros((reps, rows, nh, hd), jnp.float32),
+                            "m": jnp.full((reps, rows, nh), -1e30,
+                                          jnp.float32)})
+            elif spec.mixer == "slstm":
+                du, _, _ = ssm.slstm_dims(cfg)
+                z = lambda: jnp.zeros((reps, rows, du), jnp.float32)
+                out.append({"c": z(), "n": z(), "h": z(),
+                            "m": jnp.full((reps, rows, du), -1e30,
+                                          jnp.float32)})
+            else:
+                raise ValueError(spec.mixer)
+        return out
+
+    def _head_token(self, head_p, x_last):
+        """x_last (b, 1, d) replicated -> greedy token (b,).  Local vocab
+        shard logits, tiled all-gather, argmax — each logit column is the
+        full-d contraction, so the argmax is bitwise TP-invariant."""
+        x_ln, _ = units.prenorm_fwd(head_p["ln_f"], x_last, self.cfg)
+        logits = jnp.einsum("bsd,dv->bsv", x_ln, head_p["w_lm"])[:, 0]
+        logits = jax.lax.all_gather(logits, "model", axis=1, tiled=True)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _build_decode(self):
+        cfg, period, specs, tps = self.cfg, self.period, self.specs, self._tps
+
+        def body(blocks_p, embed_p, head_p, caches, tables, pos, toks):
+            x = jnp.take(embed_p["emb"], toks, axis=0)[:, None, :]
+            active = pos >= 0
+            new_caches = []
+            for i in range(period):
+                def lbody(x, pc, spec=specs[i], tpc=tps[i]):
+                    lp, cache = pc
+                    y, nc = M.decode_layer_paged(lp, tpc, x, cache, tables,
+                                                 pos, active, spec, cfg)
+                    return y, nc
+                x, nc = jax.lax.scan(lbody, x, (blocks_p[i], caches[i]))
+                new_caches.append(nc)
+            return self._head_token(head_p, x), new_caches
+
+        fn = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(self._bspecs, self._espec, self._hspec, self._cspecs,
+                      P("data", None), P("data"), P("data")),
+            out_specs=(P("data"), self._cspecs),
+            check_rep=False)
+        return jax.jit(fn, donate_argnums=(3,))
+
+    def _prefill_fn(self, S: int):
+        if S in self._prefills:
+            return self._prefills[S]
+        cfg, period, specs, tps = self.cfg, self.period, self.specs, self._tps
+        bs = self.ecfg.block_size
+        rows_local = self.pool.pc.rows_local
+        rope = units.rope_tables(S, cfg.hd, cfg.rope_theta)
+
+        def body(blocks_p, embed_p, head_p, caches, tokens, lengths, owner,
+                 rl, clear, dsts):
+            own = owner == jax.lax.axis_index("data")        # (G,)
+            x = jnp.take(embed_p["emb"], tokens, axis=0)     # (G, S, d)
+            new_caches = []
+            for i in range(period):
+                def lbody(x, pc, spec=specs[i], tpc=tps[i], dst=dsts[i]):
+                    lp, cache = pc
+                    y, kv = M.prefill_layer(lp, tpc, x, rope, lengths, spec,
+                                            cfg)
+                    if spec.mixer == "attn":
+                        nc = _scatter_kv(cache, kv, dst, clear, own, lengths,
+                                         bs)
+                    else:
+                        # non-owner (and dummy-row) writes index OOB -> drop
+                        rle = jnp.where(own, rl, rows_local)
+                        nc = jax.tree.map(
+                            lambda c, s: c.at[rle].set(
+                                s.astype(c.dtype), mode="drop"), cache, kv)
+                    return y, nc
+                x, nc = jax.lax.scan(lbody, x, (blocks_p[i], caches[i]))
+                new_caches.append(nc)
+            idx = jnp.clip(lengths - 1, 0, S - 1)
+            x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+            return self._head_token(head_p, x_last), new_caches
+
+        rep = P()
+        fn = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(self._bspecs, self._espec, self._hspec, self._cspecs,
+                      rep, rep, rep, rep, rep, [rep] * period),
+            out_specs=(rep, self._cspecs),
+            check_rep=False)
+        self._prefills[S] = jax.jit(fn, donate_argnums=(3,))
+        return self._prefills[S]
+
+    # ------------------------------------------------------------------
+    # request lifecycle
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, max_new: int) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, prompt, max_new)
+        self.requests[rid] = req
+        self.metrics.submit(rid)
+        need = blocks_needed(self.cfg, self.ecfg.block_size, self.pool.pc.width,
+                             req.plen, max_new)
+        req.blocks_needed = need
+        if (req.plen < 1 or max_new < 1
+                or req.plen + max_new > self.ecfg.max_seq
+                or need > self.ecfg.blocks
+                or not self.scheduler.submit(req)):
+            req.status = "rejected"
+            self.metrics.reject(rid)
+        return req
+
+    def _retire(self, req: Request, finished: list) -> None:
+        self.pool.release(req.row)
+        self._pos[req.row] = -1
+        self._tok[req.row] = 0
+        self._row_req[req.row] = None
+        req.status = "done"
+        self.metrics.finish(req.rid, len(req.generated))
+        finished.append(req)
+
+    def _dst_map(self, spec: LayerSpec, block_ids, plen: int, S: int):
+        """Per-row block destinations for the prefill KV scatter: chunk j of
+        the padded prompt -> local block id, or -1 (dropped).  Global layers
+        place chunk j in table entry j; windowed layers keep, per ring slot,
+        only the *latest* chunk mapping to it (earlier occupants would be
+        outside the window at first decode — see ring analysis in tests)."""
+        bs = self.ecfg.block_size
+        nB = S // bs
+        dst = np.full(nB, -1, np.int32)
+        last = (plen - 1) // bs
+        if spec.window is None:
+            for j in range(last + 1):
+                dst[j] = block_ids[j]
+        else:
+            ring = M.attn_ring_blocks(spec, bs, self.pool.pc.width)
+            for r in range(ring):
+                j = last - ((last - r) % ring)
+                if 0 <= j <= last:
+                    dst[j] = block_ids[j % ring] if last < ring \
+                        else block_ids[r]
+        return dst
+
+    def _prefill(self, admitted, finished) -> None:
+        e = self.ecfg
+        G = e.prefill_group
+        S = -(-max(req.plen for req, _ in admitted) // self._bucket) \
+            * self._bucket
+        nB = S // e.block_size
+        W = self.pool.pc.width
+        tokens = np.zeros((G, S), np.int32)
+        lengths = np.ones(G, np.int32)
+        owner = np.full(G, -1, np.int32)
+        rl = np.zeros(G, np.int32)
+        clear = np.full((G, W), -1, np.int32)
+        dsts = [np.full((G, nB), -1, np.int32) if s.mixer == "attn"
+                else np.zeros((G, 1), np.int32) for s in self.specs]
+        for gi, (req, adm) in enumerate(admitted):
+            tokens[gi, : req.plen] = req.prompt
+            lengths[gi] = req.plen
+            owner[gi] = adm.shard
+            rl[gi] = adm.row_local
+            clear[gi, : len(adm.block_ids)] = adm.block_ids
+            for i, spec in enumerate(self.specs):
+                if spec.mixer == "attn":
+                    dsts[i][gi] = self._dst_map(spec, adm.block_ids,
+                                                req.plen, S)
+            req.row = adm.row
+            req.status = "active"
+            self._row_req[adm.row] = req
+            self.metrics.admit(req.rid)
+
+        rep = lambda a: jax.device_put(a, self._sh_rep)
+        first, self.caches = self._prefill_fn(S)(
+            self.params["blocks"], self.params["embed"], self.params["head"],
+            self.caches, rep(tokens), rep(lengths), rep(owner), rep(rl),
+            rep(clear), [rep(d) for d in dsts])
+        first = np.asarray(jax.device_get(first))
+        for gi, (req, adm) in enumerate(admitted):
+            req.generated.append(int(first[gi]))
+            self.metrics.first_token(req.rid)
+            self._pos[adm.row] = req.plen
+            self._tok[adm.row] = int(first[gi])
+            if len(req.generated) >= req.max_new:
+                self._retire(req, finished)
+
+    def _decode_tick(self, finished) -> None:
+        rows = lambda a: jax.device_put(a, self._sh_rows)
+        nxt, self.caches = self._decode(
+            self.params["blocks"], self.params["embed"], self.params["head"],
+            self.caches, rows(self.pool.table), rows(self._pos),
+            rows(self._tok))
+        nxt = np.asarray(jax.device_get(nxt))
+        for row in np.nonzero(self._pos >= 0)[0]:
+            req = self._row_req[row]
+            req.generated.append(int(nxt[row]))
+            if len(req.generated) >= req.max_new:
+                self._retire(req, finished)
+            else:
+                self._tok[row] = int(nxt[row])
+                self._pos[row] += 1
+
+    def step(self) -> List[Request]:
+        """One engine tick: admit + prefill (interleaved with in-flight
+        decode state), decode every active row, retire finished requests.
+        Returns the requests that finished this tick."""
+        finished: List[Request] = []
+        admitted = self.scheduler.take_admissible(self.pool,
+                                                  self.ecfg.prefill_group)
+        if admitted:
+            self._prefill(admitted, finished)
+        if np.any(self._pos >= 0):
+            self._decode_tick(finished)
+        self.metrics.tick(self.scheduler.depth, self.pool.active_rows)
+        return finished
+
+    def run(self, max_ticks: int = 100_000) -> List[Request]:
+        """Drive ``step`` until queue and rows drain; returns all finished."""
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            if not self.scheduler.depth and not np.any(self._pos >= 0):
+                return done
+            done.extend(self.step())
+        raise RuntimeError(f"engine did not drain in {max_ticks} ticks")
+
+    def generate(self, prompts, max_new: int) -> List[np.ndarray]:
+        """Synchronous batch: submit all, run to completion, return each
+        request's prompt+generated tokens (rejected submissions raise)."""
+        reqs = [self.submit(p, max_new) for p in prompts]
+        bad = [r.rid for r in reqs if r.status == "rejected"]
+        if bad:
+            raise RuntimeError(f"requests rejected at submit: {bad}")
+        self.run()
+        return [r.tokens() for r in reqs]
+
+    def reset_metrics(self) -> None:
+        self.metrics.reset()
+
+
+def _scatter_kv(cache, kv, dst, clear, own, lengths, bs: int):
+    """Scatter one layer's prefill KV into its block pool (single rep slice,
+    local shapes).  ``dst``/``clear`` hold local block ids or -1; non-owner
+    rows, dummy rows and -1 entries are redirected out of bounds and dropped.
+    Slot positions of every allocated block are cleared first, so blocks
+    reused from a retired request cannot leak stale (maskable-looking)
+    positions into later decode steps."""
+    nbl = cache["k"].shape[0]
+    g, kvh, s, hd = kv["k"].shape
+    nB = dst.shape[1]
+    ok = own[:, None]
+    dste = jnp.where(ok & (dst >= 0), dst, nbl)
+    cle = jnp.where(ok & (clear >= 0), clear, nbl)
+
+    def chunks(a):                    # (G, kvh, S, hd) -> (G, nB, kvh, bs, hd)
+        return a.reshape(g, kvh, nB, bs, hd).transpose(0, 2, 1, 3, 4)
+
+    ck = cache["k"].at[dste].set(chunks(kv["k"]).astype(cache["k"].dtype),
+                                 mode="drop")
+    cv = cache["v"].at[dste].set(chunks(kv["v"]).astype(cache["v"].dtype),
+                                 mode="drop")
+    grid = jnp.arange(nB * bs, dtype=jnp.int32).reshape(nB, bs)
+    pv = jnp.where(grid[None] < lengths[:, None, None], grid[None], -1)
+    cpos = cache["pos"].at[cle].set(-1, mode="drop")
+    cpos = cpos.at[dste].set(jnp.broadcast_to(pv, (g, nB, bs)), mode="drop")
+    return {"k": ck, "v": cv, "pos": cpos}

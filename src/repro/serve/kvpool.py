@@ -1,0 +1,117 @@
+"""Paged KV/state pool: host-side block & row accounting for the serve engine.
+
+The device side holds, per data shard, a physical pool of ``blocks + 1``
+fixed-size KV blocks per attention layer (the last block is the *garbage*
+block: never allocated, its slot positions stay -1 so reads of it are always
+masked) plus one recurrent-state slot per engine row for SSM layers.  This
+module owns the matching host-side accounting:
+
+* a free-list of **rows** (continuous-batching slots) per data shard,
+* a free-list of **blocks** per data shard,
+* the **block table** (rows x width) of *local* block ids that the jitted
+  decode/prefill steps index with — unallocated entries point at the garbage
+  block.
+
+Admission control is explicit: ``can_admit(need)`` answers whether any shard
+has a free row and ``need`` free blocks; the scheduler queues (or the engine
+rejects) requests that do not fit — the pool is a fixed memory budget, not a
+per-request allocation (cf. "Pipeline Parallelism with Controllable Memory").
+
+Block lifetimes never touch the device: freeing is a host-side list append +
+table reset, and stale device-side block contents are neutralised by the
+*next* prefill, which clears the ``pos`` slots of every block it allocates
+before writing (positions of -1 are masked out of attention exactly like an
+empty ring slot in ``model._attn_decode``).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class PoolConfig:
+    rows: int                 # continuous-batching slots (global, over shards)
+    blocks: int               # usable KV blocks per data shard (+1 garbage)
+    block_size: int           # tokens per block
+    max_seq: int              # longest prompt+generation the table can map
+    data: int = 1             # data shards (rows/blocks are per-shard local)
+
+    @property
+    def width(self) -> int:
+        """Block-table width: blocks needed to map ``max_seq`` positions."""
+        return -(-self.max_seq // self.block_size)
+
+    @property
+    def garbage(self) -> int:
+        """Local id of the never-allocated garbage block (= ``blocks``)."""
+        return self.blocks
+
+    @property
+    def rows_local(self) -> int:
+        return self.rows // self.data
+
+
+@dataclass(frozen=True)
+class Admission:
+    row: int                  # global row id (shard-major)
+    shard: int                # owning data shard
+    row_local: int            # row index within the shard
+    block_ids: tuple          # local block ids, table entries 0..need-1
+
+
+class PagedPool:
+    def __init__(self, pc: PoolConfig):
+        import numpy as np
+        if pc.rows % pc.data:
+            raise ValueError(f"rows={pc.rows} not divisible by data={pc.data}")
+        if pc.blocks < 1 or pc.block_size < 1:
+            raise ValueError("need at least one block of at least one token")
+        self.pc = pc
+        self.table = np.full((pc.rows, pc.width), pc.garbage, np.int32)
+        self._free_rows = [deque(range(pc.rows_local)) for _ in range(pc.data)]
+        self._free_blocks = [deque(range(pc.blocks)) for _ in range(pc.data)]
+        self._held = {}       # global row -> Admission
+
+    # -- introspection ------------------------------------------------------
+
+    def free_rows(self, shard: int) -> int:
+        return len(self._free_rows[shard])
+
+    def free_blocks(self, shard: int) -> int:
+        return len(self._free_blocks[shard])
+
+    @property
+    def active_rows(self) -> int:
+        return len(self._held)
+
+    # -- admission ----------------------------------------------------------
+
+    def can_admit(self, need: int) -> Optional[int]:
+        """Shard that can hold a request needing ``need`` blocks, or None."""
+        if need > self.pc.blocks:
+            return None
+        for d in range(self.pc.data):
+            if self._free_rows[d] and len(self._free_blocks[d]) >= need:
+                return d
+        return None
+
+    def admit(self, need: int) -> Admission:
+        d = self.can_admit(need)
+        if d is None:
+            raise RuntimeError(f"pool full: cannot admit need={need}")
+        rl = self._free_rows[d].popleft()
+        ids = tuple(self._free_blocks[d].popleft() for _ in range(need))
+        row = d * self.pc.rows_local + rl
+        self.table[row, :] = self.pc.garbage
+        self.table[row, : len(ids)] = ids
+        adm = Admission(row, d, rl, ids)
+        self._held[row] = adm
+        return adm
+
+    def release(self, row: int) -> None:
+        adm = self._held.pop(row)
+        self._free_blocks[adm.shard].extend(adm.block_ids)
+        self._free_rows[adm.shard].append(adm.row_local)
+        self.table[row, :] = self.pc.garbage

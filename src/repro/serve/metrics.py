@@ -1,0 +1,93 @@
+"""Serving observability: per-request lifecycle timestamps + fleet counters.
+
+The engine calls one method per lifecycle edge (submit / reject / admit /
+first_token / finish) and ``tick`` once per engine step; ``summary()``
+reduces that to the numbers the bench reports — decode throughput, TTFT and
+end-to-end latency percentiles, queue depth.  A ``clock`` can be injected
+for deterministic tests.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _pct(xs, q):
+    if not xs:
+        return None
+    import numpy as np
+    return float(np.percentile(np.asarray(xs, float), q))
+
+
+def _ms(seconds):
+    return None if seconds is None else seconds * 1e3
+
+
+class ServeMetrics:
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self.reset()
+
+    def reset(self) -> None:
+        self.t0 = self._clock()
+        self.submitted = 0
+        self.rejected = 0
+        self.admitted = 0
+        self.completed = 0
+        self.gen_tokens = 0
+        self.ticks = 0
+        self.max_queue_depth = 0
+        self.max_active = 0
+        self.ttft = []        # submit -> first token, seconds
+        self.latency = []     # submit -> finish, seconds
+        self._req = {}        # rid -> {"submit"/"admit"/"first": t}
+
+    # -- lifecycle edges ----------------------------------------------------
+
+    def submit(self, rid) -> None:
+        self.submitted += 1
+        self._req[rid] = {"submit": self._clock()}
+
+    def reject(self, rid) -> None:
+        self.rejected += 1
+        self._req.pop(rid, None)
+
+    def admit(self, rid) -> None:
+        self.admitted += 1
+        self._req[rid]["admit"] = self._clock()
+
+    def first_token(self, rid) -> None:
+        r = self._req[rid]
+        r["first"] = self._clock()
+        self.ttft.append(r["first"] - r["submit"])
+
+    def finish(self, rid, n_gen: int) -> None:
+        r = self._req.pop(rid)
+        self.completed += 1
+        self.gen_tokens += n_gen
+        self.latency.append(self._clock() - r["submit"])
+
+    def tick(self, queue_depth: int, active: int) -> None:
+        self.ticks += 1
+        self.max_queue_depth = max(self.max_queue_depth, queue_depth)
+        self.max_active = max(self.max_active, active)
+
+    # -- reduction ----------------------------------------------------------
+
+    def summary(self) -> dict:
+        dt = max(self._clock() - self.t0, 1e-9)
+        return {
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "gen_tokens": self.gen_tokens,
+            "ticks": self.ticks,
+            "elapsed_s": dt,
+            "tokens_per_s": self.gen_tokens / dt,
+            "ttft_ms": {"p50": _ms(_pct(self.ttft, 50)),
+                        "p99": _ms(_pct(self.ttft, 99))},
+            "latency_ms": {"p50": _ms(_pct(self.latency, 50)),
+                           "p99": _ms(_pct(self.latency, 99))},
+            "max_queue_depth": self.max_queue_depth,
+            "max_active": self.max_active,
+        }

@@ -1,0 +1,43 @@
+"""Token-at-a-time reference generator — the serve engine's differential
+oracle.
+
+This is the old ``launch/serve.py`` path, kept verbatim on purpose: prefill
+is a teacher-forced loop of the *same* jitted single-token ``decode_step``
+used for generation, so it exercises none of the engine's machinery (no
+paging, no batched prefill, no scheduler) while computing the same greedy
+continuation.  Tests compare ``Engine.generate`` output against this
+function exactly; the engine defaults its caches to f32 to match the
+``dtype`` here (bf16 ring caches vs f32 paged blocks would otherwise differ
+in the last bits and occasionally flip an argmax).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+def generate(cfg, params_stacked, prompts, max_new: int, *,
+             max_seq: int = 512, dtype=jnp.float32):
+    """prompts (b, p) int32 -> (b, p+max_new) greedy continuation, computed
+    one token at a time through ``model.decode_step`` ring caches."""
+    b, plen = prompts.shape
+    caches = M.init_caches_stacked(cfg, b, max_seq, dtype=dtype)
+
+    @jax.jit
+    def step(caches, tok, pos):
+        nxt, logits, caches = M.decode_step(
+            params_stacked, caches, {"tokens": tok[:, None]}, pos, cfg)
+        return caches, nxt, logits
+
+    toks = [prompts[:, i] for i in range(plen)]
+    nxt = None
+    for pos in range(plen):
+        caches, nxt, _ = step(caches, toks[pos], jnp.int32(pos))
+    out = list(toks)
+    cur = nxt
+    for pos in range(plen, plen + max_new):
+        out.append(cur)
+        caches, cur, _ = step(caches, cur, jnp.int32(pos))
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,69 @@
+"""Request scheduler: FIFO queue with pool-gated continuous admission.
+
+Each engine tick asks ``take_admissible`` for the next batch of requests to
+prefill.  Admission is strictly head-of-line: the scan stops at the first
+queued request the pool cannot hold, so a large request is never starved by
+smaller ones submitted after it (at the cost of head-of-line blocking — the
+simplest policy that keeps completion order fair and the differential tests
+deterministic).  ``submit`` applies the queue-depth half of admission
+control: a full queue rejects immediately rather than buffering unboundedly.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.kvpool import Admission, PagedPool
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (plen,) int32
+    max_new: int
+    blocks_needed: int = 0
+    status: str = "queued"        # queued | active | done | rejected
+    row: int = -1                 # engine row while active
+    generated: list = field(default_factory=list)
+
+    @property
+    def plen(self) -> int:
+        return int(self.prompt.shape[0])
+
+    def tokens(self) -> np.ndarray:
+        """prompt + generated, the full served sequence."""
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
+
+
+class Scheduler:
+    def __init__(self, max_queue: int):
+        self.max_queue = max_queue
+        self._q: deque = deque()
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    def submit(self, req: Request) -> bool:
+        """Queue a request; False = rejected (queue at ``max_queue``)."""
+        if len(self._q) >= self.max_queue:
+            return False
+        self._q.append(req)
+        return True
+
+    def take_admissible(self, pool: PagedPool,
+                        limit: int) -> List[Tuple[Request, Admission]]:
+        """Pop up to ``limit`` head-of-line requests that fit the pool right
+        now, admitting each (rows/blocks are consumed as they are popped)."""
+        out = []
+        while self._q and len(out) < limit:
+            req = self._q[0]
+            if pool.can_admit(req.blocks_needed) is None:
+                break
+            self._q.popleft()
+            out.append((req, pool.admit(req.blocks_needed)))
+        return out

@@ -1,0 +1,192 @@
+"""Serving engine differentials + paged-pool unit tests.
+
+The engine's correctness contract is exactness: ``Engine.generate`` (batched
+prefill, paged KV pool, continuous batching) must produce the same greedy
+tokens as the token-at-a-time reference oracle (``serve.reference``), which
+shares none of its machinery.  One config per architecture family pins that,
+including mid-stream admission (a second request joining while the first is
+decoding) and sliding-window ring wraparound with a window much smaller than
+the sequence.  The pool tests pin the host-side invariants the device maths
+relies on: disjoint allocation, garbage-block table entries, slot reuse
+after release, admission rejection when full.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import (Engine, EngineConfig, PagedPool, PoolConfig,
+                         blocks_needed, reference, stacked_params)
+
+FAMILY_ARCHS = ["qwen3-4b", "gemma3-12b", "xlstm-125m"]
+
+
+def _reduced(arch):
+    return get_config(arch).reduced(n_layers=2, d_model=128, n_heads=4,
+                                    vocab=512)
+
+
+def _setup(arch, b=3, plen=12):
+    cfg = _reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    prompts = np.asarray(jax.random.randint(key, (b, plen), 0, cfg.vocab),
+                         np.int32)
+    return cfg, params, prompts
+
+
+# ---------------------------------------------------------------------------
+# Paged pool (host-side accounting).
+# ---------------------------------------------------------------------------
+
+def test_pool_admit_release_reuse():
+    pool = PagedPool(PoolConfig(rows=2, blocks=8, block_size=4, max_seq=32))
+    a = pool.admit(3)
+    assert a.row == 0 and len(a.block_ids) == 3
+    assert list(pool.table[0, :3]) == list(a.block_ids)
+    assert all(pool.table[0, 3:] == pool.pc.garbage)
+    assert pool.free_blocks(0) == 5 and pool.free_rows(0) == 1
+    b = pool.admit(5)
+    assert set(a.block_ids).isdisjoint(b.block_ids)
+    assert pool.can_admit(1) is None          # rows exhausted
+    pool.release(a.row)
+    assert pool.free_rows(0) == 1 and pool.free_blocks(0) == 3
+    assert all(pool.table[a.row] == pool.pc.garbage)
+    c = pool.admit(3)                         # released blocks come back
+    assert set(c.block_ids) <= set(range(8)) - set(b.block_ids) \
+        | set(a.block_ids)
+
+
+def test_pool_rejects_when_full():
+    pool = PagedPool(PoolConfig(rows=4, blocks=4, block_size=4, max_seq=32))
+    assert pool.can_admit(5) is None          # more than the pool holds
+    pool.admit(3)
+    assert pool.can_admit(2) is None          # only 1 block left
+    assert pool.can_admit(1) == 0
+    with pytest.raises(RuntimeError):
+        pool.admit(2)
+
+
+def test_pool_shard_locality():
+    pool = PagedPool(PoolConfig(rows=4, blocks=2, block_size=4, max_seq=16,
+                                data=2))
+    a = pool.admit(2)
+    b = pool.admit(2)                         # shard 0 blocks gone -> shard 1
+    assert {a.shard, b.shard} == {0, 1}
+    assert b.row == b.shard * pool.pc.rows_local + b.row_local
+
+
+def test_blocks_needed_per_family():
+    bs, width = 4, 16
+    qwen = _reduced("qwen3-4b")
+    assert blocks_needed(qwen, bs, width, 10, 6) == 4      # ceil(16/4)
+    xl = _reduced("xlstm-125m")
+    assert blocks_needed(xl, bs, width, 10, 6) == 0        # SSM-only
+    gm = _reduced("gemma3-12b")
+    win = dataclasses.replace(
+        gm, layers=tuple(dataclasses.replace(s, window=8)
+                         for s in gm.layers))
+    # ring = ceil(8/4)+1 = 3 caps the 4 blocks a 16-token request spans
+    assert blocks_needed(win, bs, width, 10, 6) == 3
+
+
+# ---------------------------------------------------------------------------
+# Engine vs token-at-a-time oracle (exact greedy match).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_engine_matches_reference(arch):
+    cfg, params, prompts = _setup(arch)
+    max_new = 6
+    ref = np.asarray(reference.generate(
+        cfg, stacked_params(cfg, params), prompts, max_new,
+        max_seq=prompts.shape[1] + max_new + 1))
+    eng = Engine(cfg, params, EngineConfig(
+        rows=4, blocks=32, block_size=4, max_seq=64, prefill_group=2,
+        prefill_bucket=4))
+    outs = eng.generate(list(prompts), max_new)
+    for i in range(len(outs)):
+        np.testing.assert_array_equal(outs[i], ref[i])
+    s = eng.metrics.summary()
+    assert s["completed"] == len(outs) and s["gen_tokens"] == 3 * max_new
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_mid_stream_admission(arch):
+    """A request admitted while another is mid-decode must not perturb the
+    in-flight rows, and must itself decode exactly."""
+    cfg, params, prompts = _setup(arch, b=2)
+    max_new = 6
+    ref = np.asarray(reference.generate(
+        cfg, stacked_params(cfg, params), prompts, max_new,
+        max_seq=prompts.shape[1] + max_new + 1))
+    eng = Engine(cfg, params, EngineConfig(
+        rows=2, blocks=16, block_size=4, max_seq=32, prefill_group=1,
+        prefill_bucket=4))
+    r0 = eng.submit(prompts[0], max_new)
+    eng.step()
+    eng.step()                                 # r0 is two tokens in
+    assert len(r0.generated) >= 2
+    r1 = eng.submit(prompts[1], max_new)
+    eng.run()
+    np.testing.assert_array_equal(r0.tokens(), ref[0])
+    np.testing.assert_array_equal(r1.tokens(), ref[1])
+
+
+def test_ring_wraparound_sliding_window():
+    """Window much smaller than the sequence: the paged ring must overwrite
+    and mask exactly like the reference ring cache."""
+    gm = _reduced("gemma3-12b")
+    cfg = dataclasses.replace(
+        gm, layers=tuple(dataclasses.replace(s, window=8)
+                         for s in gm.layers))
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(key, cfg)
+    prompts = np.asarray(jax.random.randint(key, (2, 20), 0, cfg.vocab),
+                         np.int32)
+    max_new = 8                                # L=28 >> window=8
+    ref = np.asarray(reference.generate(
+        cfg, stacked_params(cfg, params), prompts, max_new, max_seq=32))
+    eng = Engine(cfg, params, EngineConfig(
+        rows=2, blocks=8, block_size=4, max_seq=32, prefill_group=2,
+        prefill_bucket=4))
+    outs = eng.generate(list(prompts), max_new)
+    for i in range(2):
+        np.testing.assert_array_equal(outs[i], ref[i])
+    # ring admission: 28 tokens span 7 blocks but the ring caps at 3
+    assert eng.requests[0].blocks_needed == 3
+
+
+def test_queue_rejection_and_slot_reuse():
+    """One row, tiny queue: continuous batching must drain submissions
+    through the same slot, reject the overflow, and stay exact."""
+    cfg, params, prompts = _setup("qwen3-4b", b=4)
+    max_new = 4
+    ref = np.asarray(reference.generate(
+        cfg, stacked_params(cfg, params), prompts, max_new,
+        max_seq=prompts.shape[1] + max_new + 1))
+    eng = Engine(cfg, params, EngineConfig(
+        rows=1, blocks=8, block_size=4, max_seq=32, prefill_group=1,
+        max_queue=3, prefill_bucket=4))
+    reqs = [eng.submit(p, max_new) for p in prompts]
+    # all four land before any tick drains: 3 queued, 4th over max_queue
+    assert [r.status for r in reqs] == ["queued"] * 3 + ["rejected"]
+    eng.run()
+    for i in range(3):
+        assert reqs[i].status == "done"
+        np.testing.assert_array_equal(reqs[i].tokens(), ref[i])
+    assert eng.metrics.rejected == 1 and eng.metrics.completed == 3
+    assert eng.pool.active_rows == 0 and eng.pool.free_blocks(0) == 8
+
+
+def test_submit_validation():
+    cfg, params, _ = _setup("qwen3-4b")
+    eng = Engine(cfg, params, EngineConfig(
+        rows=1, blocks=4, block_size=4, max_seq=16, prefill_bucket=4))
+    too_long = eng.submit(np.zeros(20, np.int32), 4)     # plen+new > max_seq
+    assert too_long.status == "rejected"
+    too_many = eng.submit(np.zeros(8, np.int32), 8)      # needs 4 blocks: ok
+    assert too_many.status == "queued"
