@@ -29,7 +29,12 @@ and decomposes a step into
 
 where ``t_skeleton`` ablates both compute and exchange but keeps the full
 dispatch structure (stub branches preserve the loss data-dependence so XLA
-cannot dead-code the skeleton).  Shares are relative to t_full.
+cannot dead-code the skeleton).  Shares are relative to t_full.  On a
+mesh with a model axis (tp > 1) the breakdown adds a TP-collective column:
+``tp_collective_s = t_full - t_ablate_tp`` (``ablate="tp"`` executes the
+same math with an identity TPContext) and ``tp_exposed_share_hlo``, the
+structurally exposed share of model-axis collectives in the compiled HLO
+(``launch.hlo_analysis.collective_overlap``).
 
 Fake-device caveat: all devices share one CPU, so measured slot time folds
 every stage's compute into one core and bubbles show up as *less* work per
@@ -54,6 +59,7 @@ from jax.sharding import Mesh
 
 from benchmarks.common import T_B, T_F, T_W, time_runner, write_json
 from repro.api import make_runner
+from repro.launch.hlo_analysis import collective_overlap
 from repro.configs import get_config
 from repro.core.schedule import SCHEDULES, build
 from repro.core.simulator import StageTimes, simulate
@@ -83,17 +89,24 @@ def _time_fn(fn, args, *, steps, warmup, repeats=2):
 
 
 def _breakdown(cfg, tables, pl, mesh, m, mb_shape, stacked, tokens, labels,
-               *, fuse, steps, warmup):
-    """compute/exchange/dispatch split via ablated program variants."""
-    t = {}
-    for ablate in (None, "exchange", "both"):
+               *, fuse, steps, warmup, tp=1):
+    """compute/exchange/dispatch (+ TP-collective when tp > 1) split via
+    ablated program variants."""
+    t, hlo_tp = {}, None
+    model_axis = "model" if tp > 1 else None
+    ablations = (None, "exchange", "both") + (("tp",) if tp > 1 else ())
+    for ablate in ablations:
         step = build_pipeline_step(cfg, tables, pl, mesh, m, mb_shape,
-                                   stacked, fuse_slots=fuse, ablate=ablate)
+                                   stacked, model_axis=model_axis,
+                                   fuse_slots=fuse, ablate=ablate)
+        if ablate is None and tp > 1:
+            compiled = step.lower(*stacked, tokens, labels).compile()
+            hlo_tp = collective_overlap(compiled.as_text(), tp_size=tp)["tp"]
         with mesh:
             t[ablate] = _time_fn(step, (*stacked, tokens, labels),
                                  steps=steps, warmup=warmup)
     full, noex, skel = t[None], t["exchange"], t["both"]
-    return {
+    out = {
         "t_full_s": round(full, 4),
         "compute_s": round(max(noex - skel, 0.0), 4),
         "exchange_s": round(max(full - noex, 0.0), 4),
@@ -101,6 +114,12 @@ def _breakdown(cfg, tables, pl, mesh, m, mb_shape, stacked, tokens, labels,
         "dispatch_share": round(skel / full, 4),
         "exchange_share": round(max(full - noex, 0.0) / full, 4),
     }
+    if "tp" in t:
+        tp_s = max(full - t["tp"], 0.0)
+        out["tp_collective_s"] = round(tp_s, 4)
+        out["tp_collective_share"] = round(tp_s / full, 4)
+        out["tp_exposed_share_hlo"] = round(hlo_tp["exposed_share"], 4)
+    return out
 
 
 def main(pp: int = 2, m: int = 4, steps: int = 8, warmup: int = 1,
@@ -189,7 +208,8 @@ def main(pp: int = 2, m: int = 4, steps: int = 8, warmup: int = 1,
             r["breakdown"] = {
                 "fused" if f else "generic": _breakdown(
                     cfg, tables, pl, mesh, m, (mb, dc.seq_len), stacked,
-                    tokens, labels, fuse=f, steps=steps, warmup=warmup)
+                    tokens, labels, fuse=f, steps=steps, warmup=warmup,
+                    tp=tp)
                 for f in (True, False)}
         print(f"[{kind:10s}] {r}", flush=True)
 

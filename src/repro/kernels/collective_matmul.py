@@ -1,0 +1,122 @@
+"""Pallas collective-matmul: row-parallel matmul fused with its all-reduce
+contribution.
+
+Every row-parallel projection (wo / wd / w2 / w_out / w_down) ends its unit
+with ``psum(x @ w)``.  Decomposed over a ring (the ``TPContext.ring_psum``
+schedule), hop ``s`` of the reduce-scatter must compute the local partial of
+one output-feature tile and fold it into the partial just received from the
+ring neighbour: ``acc + x @ w_tile``.  That is exactly one fused kernel —
+the matmul epilogue accumulates the ring contribution while the output tile
+is still in VMEM, so the per-hop accumulate costs no extra HBM round-trip.
+
+``matmul_psum_step`` is that per-hop kernel (MXU-tiled over (M, N, K)
+blocks, fp32 accumulator initialised from ``acc`` on the first K step);
+``collective_matmul_allreduce`` drives it around the ring: ``t-1`` fused
+reduce-scatter hops followed by a ``t-1``-hop all-gather of the owned
+tiles, matching ``lax.psum(x @ w)`` bitwise at ``t <= 2`` and up to ring
+reassociation beyond.  Oracle: ``ref.reference_matmul_psum_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.tp.context import TPContext
+
+
+def _matmul_acc_kernel(x_ref, w_ref, acc_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = acc_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                          w_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul_psum_step(x, w, acc, bm: int = 128, bn: int = 128, bk: int = 128,
+                     interpret: bool = True):
+    """One fused ring hop: ``x (m, k) @ w (k, n) + acc (m, n)`` in fp32.
+
+    The accumulator block initialises the output tile at the first K step,
+    so the ring partial rides the matmul epilogue instead of a separate
+    elementwise pass.  Returns fp32 (the ring carries full precision; the
+    caller casts once after the all-gather).
+    """
+    m, k = x.shape
+    n = w.shape[1]
+    assert w.shape[0] == k and acc.shape == (m, n), (x.shape, w.shape,
+                                                     acc.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    if pm or pn:
+        acc = jnp.pad(acc, ((0, pm), (0, pn)))
+    out = pl.pallas_call(
+        _matmul_acc_kernel,
+        grid=(x.shape[0] // bm, w.shape[1] // bn, x.shape[1] // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+                  pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+                  pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], w.shape[1]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(x, w, acc)
+    return out[:m, :n]
+
+
+def collective_matmul_allreduce(x, w, tp: TPContext, *,
+                                interpret: Optional[bool] = None):
+    """Ring-decomposed ``tp.psum(x @ w)`` with fused per-hop accumulates.
+
+    x (..., k_local) and w (k_local, n) are the per-rank shards of a
+    row-parallel projection; returns the fully all-reduced (..., n) product
+    on every rank.  Falls back to kernel-matmul + monolithic psum when
+    there is no ring (``size <= 1``) or ``n`` does not tile by ``size``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lead, n = x.shape[:-1], w.shape[1]
+    x2 = x.reshape(-1, x.shape[-1])
+    t = tp.size
+
+    def out_of(full):
+        return full.reshape(lead + (n,)).astype(x.dtype)
+
+    if tp.axis is None or t == 1 or n % t:
+        z = jnp.zeros((x2.shape[0], n), jnp.float32)
+        return out_of(tp.psum(matmul_psum_step(x2, w, z,
+                                               interpret=interpret)))
+
+    cn = n // t
+    r = jax.lax.axis_index(tp.axis)
+    perm = [(i, (i + 1) % t) for i in range(t)]
+
+    def wtile(i):
+        return jax.lax.dynamic_slice_in_dim(w, (i % t) * cn, cn, axis=1)
+
+    # reduce-scatter: after hop s, rank r holds the partial of output tile
+    # (r - s) % t over ranks {r-s..r}; after t-1 hops it owns tile (r+1)%t.
+    z = jnp.zeros((x2.shape[0], cn), jnp.float32)
+    acc = matmul_psum_step(x2, wtile(r), z, interpret=interpret)
+    for s in range(1, t):
+        acc = matmul_psum_step(x2, wtile(r - s),
+                               jax.lax.ppermute(acc, tp.axis, perm),
+                               interpret=interpret)
+    # all-gather the owned tiles the rest of the way round the ring.
+    out = jnp.zeros((t, x2.shape[0], cn), jnp.float32)
+    out = jax.lax.dynamic_update_index_in_dim(out, acc, (r + 1) % t, 0)
+    buf = acc
+    for s in range(1, t):
+        buf = jax.lax.ppermute(buf, tp.axis, perm)
+        out = jax.lax.dynamic_update_index_in_dim(out, buf,
+                                                  (r - s + 1) % t, 0)
+    return out_of(jnp.concatenate([out[i] for i in range(t)], axis=-1))

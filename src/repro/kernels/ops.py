@@ -11,8 +11,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.collective_matmul import (collective_matmul_allreduce,
+                                             matmul_psum_step)
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.rmsnorm import rmsnorm_fwd
+from repro.tp.context import TPContext
 
 
 def _on_tpu() -> bool:
@@ -50,3 +53,18 @@ def flash_attention(q, k, v, causal: bool = True,
 def rmsnorm(x, g, eps: float = 1e-6, interpret: Optional[bool] = None):
     interpret = (not _on_tpu()) if interpret is None else interpret
     return rmsnorm_fwd(x, g, eps=eps, interpret=interpret)
+
+
+def collective_matmul(x, w, tp: TPContext,
+                      interpret: Optional[bool] = None):
+    """Row-parallel ``psum(x @ w)`` as a fused ring of matmul+accumulate
+    hops (``kernels.collective_matmul``)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return collective_matmul_allreduce(x, w, tp, interpret=interpret)
+
+
+def matmul_accumulate(x, w, acc, interpret: Optional[bool] = None):
+    """One fused ring hop ``x @ w + acc`` (fp32), the building block of
+    ``collective_matmul``."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return matmul_psum_step(x, w, acc, interpret=interpret)

@@ -25,3 +25,10 @@ def reference_rmsnorm(x, g, eps: float = 1e-6):
     ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(ms + eps)
             * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def reference_matmul_psum_step(x, w, acc):
+    """Oracle for one fused ring hop: fp32 ``x @ w + acc``."""
+    return (jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+            + acc.astype(jnp.float32))

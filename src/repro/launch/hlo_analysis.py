@@ -27,7 +27,11 @@ _DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
                 "s4": 1, "u4": 1}
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+# Header lines are gated on shape (top-level, "->", trailing "{") before
+# this regex runs, so it only extracts the name.  Don't try to match the
+# parameter list: tuple-typed params (conditional branch regions) nest
+# parens, which `\([^)]*\)` cannot span.
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
 _OP_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
     r"([a-z][a-z0-9\-]*)\((.*)$")
@@ -204,3 +208,163 @@ def analyze(hlo: str, while_trips: int = 1) -> dict:
             "collective_bytes": sum(coll.values()),
             "collectives": {k: int(v) for k, v in coll.items()},
             "n_while": nw}
+
+
+# ---------------------------------------------------------------------------
+# Exposed-vs-hidden collective accounting (overlap verification).
+# ---------------------------------------------------------------------------
+
+_GROUPS_RE = re.compile(
+    r"(?:replica_groups|source_target_pairs)=\{(\{[0-9,]+\}(?:,\{[0-9,]+\})*)\}")
+_GROUP_RE = re.compile(r"\{([0-9,]+)\}")
+_GTE_IDX_RE = re.compile(r"index=(\d+)")
+
+
+def _device_groups(op: Op) -> list[list[int]]:
+    m = _GROUPS_RE.search(op.rest)
+    if not m:
+        return []
+    return [[int(x) for x in g.split(",") if x]
+            for g in _GROUP_RE.findall(m.group(1))]
+
+
+def _is_tp_collective(op: Op, tp_size: int) -> bool:
+    """A collective is a model-axis (TP) one iff every replica group /
+    permute pair stays within one aligned contiguous block of ``tp_size``
+    devices — the mesh is built as devices.reshape(pp, tp), so TP peers
+    share ``id // tp_size`` while stage peers never do."""
+    if tp_size <= 1:
+        return False
+    groups = _device_groups(op)
+    if not groups:
+        return False
+    return all(len({d // tp_size for d in g}) == 1 for g in groups)
+
+
+def collective_overlap(hlo: str, tp_size: int = 1) -> dict:
+    """Structural exposed-vs-hidden classification of every collective site.
+
+    For each collective op, walk forward in program order tracking the set
+    of ops that (transitively) depend on it; the walk ends at the first
+    dependent *heavy* op (a ``dot``, or a fusion/call/branch whose body
+    contains one) or at the end of the computation.  The collective is
+    **hidden** iff at least one heavy op *independent* of it lies inside
+    that window — i.e. the scheduler has matmul work to run while the
+    collective is in flight.  A blocking collective immediately consumed by
+    its own unit's next matmul has an empty window and counts **exposed**.
+
+    Taint through ``tuple`` / ``opt-barrier`` / ``get-tuple-element`` is
+    tracked *element-wise*: ``opt-barrier`` output element k is by HLO
+    dataflow semantics exactly input element k, so a barrier tying
+    (ring state, partner state) — the braid uses one at every interleave
+    point to pin schedule order — must not leak the ring's taint onto the
+    partner's matmuls.  Cross-element barrier edges are scheduling-only.
+
+    Sites are counted once per syntactic position (a site inside a while
+    body executes every trip but counts once), split into ``tp`` (model-
+    axis, see ``_is_tp_collective``) and ``other`` (stage-axis ppermutes,
+    global psums).  Returns per-class dicts with counts, result bytes and
+    ``exposed_share`` (exposed bytes / total bytes; 0.0 when empty).
+    """
+    mod = parse_module(hlo)
+    comps = mod["computations"]
+    heavy_memo: dict[str, bool] = {}
+
+    def comp_has_dot(name: str, depth=0) -> bool:
+        if name in heavy_memo:
+            return heavy_memo[name]
+        c = comps.get(name)
+        if c is None or depth > 50:
+            return False
+        heavy_memo[name] = False          # break recursion cycles
+        found = False
+        for opname in c.order:
+            op = c.ops[opname]
+            if op.kind == "dot":
+                found = True
+                break
+            if any(comp_has_dot(callee, depth + 1)
+                   for callee in _called(op)):
+                found = True
+                break
+        heavy_memo[name] = found
+        return found
+
+    def is_heavy(op: Op) -> bool:
+        if op.kind == "dot":
+            return True
+        if op.kind in ("fusion", "call", "while", "conditional",
+                       "custom-call"):
+            return any(comp_has_dot(cn) for cn in _called(op))
+        return False
+
+    stats = {"tp": {"n": 0, "n_hidden": 0, "bytes": 0, "bytes_hidden": 0},
+             "other": {"n": 0, "n_hidden": 0, "bytes": 0, "bytes_hidden": 0}}
+
+    for comp in comps.values():
+        order = comp.order
+        ops = [comp.ops[n] for n in order]
+        operands = [set(_OPERAND_RE.findall(op.rest)) for op in ops]
+        heavy = [is_heavy(op) for op in ops]
+        for i, op in enumerate(ops):
+            base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if base not in COLLECTIVES:
+                continue
+            tainted = {op.name}
+            elem: dict[str, set[int]] = {}   # tuple op -> tainted indices
+            hidden = False
+            for j in range(i + 1, len(order)):
+                oj = ops[j]
+                if oj.kind == "tuple":
+                    idx = {e for e, nm in
+                           enumerate(_OPERAND_RE.findall(oj.rest))
+                           if nm in tainted or nm in elem}
+                    if idx:
+                        elem[oj.name] = idx
+                    continue
+                if oj.kind == "opt-barrier":
+                    names = _OPERAND_RE.findall(oj.rest)
+                    if len(names) == 1:      # identity on one tuple value
+                        nm = names[0]
+                        if nm in elem:
+                            elem[oj.name] = set(elem[nm])
+                        elif nm in tainted:
+                            tainted.add(oj.name)
+                    else:                    # defensive: variadic form
+                        idx = {e for e, nm in enumerate(names)
+                               if nm in tainted or nm in elem}
+                        if idx:
+                            elem[oj.name] = idx
+                    continue
+                if oj.kind == "get-tuple-element":
+                    names = _OPERAND_RE.findall(oj.rest)
+                    nm = names[0] if names else None
+                    im = _GTE_IDX_RE.search(oj.rest)
+                    if nm in elem and im is not None:
+                        if int(im.group(1)) in elem[nm]:
+                            tainted.add(oj.name)
+                    elif nm in tainted:
+                        tainted.add(oj.name)
+                    continue
+                # any other consumer of a partially-tainted tuple is
+                # conservatively tainted
+                if operands[j] & tainted or operands[j] & elem.keys():
+                    if heavy[j]:
+                        break             # first dependent matmul: window ends
+                    tainted.add(oj.name)
+                elif heavy[j]:
+                    hidden = True         # independent matmul in the window
+            cls = "tp" if _is_tp_collective(op, tp_size) else "other"
+            nb = _nbytes(op.type_str)
+            stats[cls]["n"] += 1
+            stats[cls]["bytes"] += nb
+            if hidden:
+                stats[cls]["n_hidden"] += 1
+                stats[cls]["bytes_hidden"] += nb
+
+    for s in stats.values():
+        s["n_exposed"] = s["n"] - s["n_hidden"]
+        s["bytes_exposed"] = s["bytes"] - s["bytes_hidden"]
+        s["exposed_share"] = (s["bytes_exposed"] / s["bytes"]
+                              if s["bytes"] else 0.0)
+    return stats

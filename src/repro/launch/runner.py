@@ -116,7 +116,8 @@ class SpmdRunner:
 
     def __init__(self, cfg: ModelConfig, oc: OptConfig, kind: str, p: int,
                  m: int, mb_shape, *, tp: int = 1,
-                 mesh: Optional[Mesh] = None, fuse_slots: bool = True):
+                 mesh: Optional[Mesh] = None, fuse_slots: bool = True,
+                 braid_tp: bool = False):
         self.cfg, self.oc, self.m = cfg, oc, m
         if mesh is None:
             ndev = len(jax.devices())
@@ -134,7 +135,8 @@ class SpmdRunner:
         self.layout = Layout("stage", cfg.n_layers, p=p,
                              lvs=stages_per_chunk(cfg, p, pl.kind),
                              placement=pl.kind)
-        self.describe = f"spmd {kind} {pl.kind} p={p} tp={tp} m={m}"
+        self.describe = (f"spmd {kind} {pl.kind} p={p} tp={tp} m={m}"
+                         + (" braid" if braid_tp else ""))
         model_axis = "model" if tp > 1 else None
 
         def sds(key):
@@ -145,7 +147,7 @@ class SpmdRunner:
         trees = jax.eval_shape(sds, jax.ShapeDtypeStruct((2,), jnp.uint32))
         self._step = build_pipeline_train_step(
             cfg, tables, pl, mesh, m, mb_shape, trees, oc,
-            model_axis=model_axis, fuse_slots=fuse_slots)
+            model_axis=model_axis, fuse_slots=fuse_slots, braid_tp=braid_tp)
         pspec = stage_param_specs(trees, model_axis=model_axis)
         self._shardings = {
             "params": jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
@@ -179,12 +181,14 @@ class SpmdRunner:
 def make_runner(runtime: str, cfg: ModelConfig, oc: OptConfig,
                 dc: DataConfig, *, schedule: str = "stp", pp: int = 2,
                 tp: int = 1, mesh: Optional[Mesh] = None,
-                fuse_slots: bool = True) -> Runner:
+                fuse_slots: bool = True, braid_tp: bool = False) -> Runner:
     """Factory over the three runtimes ('pjit' | 'pipeline' | 'spmd').
 
     ``fuse_slots`` (spmd only) selects the segment-fused slot lowering
     (static branch dispatch + pruned exchanges); pass ``False`` to force
     the generic one-switch-per-slot scan, e.g. for differential debugging.
+    ``braid_tp`` (spmd only) lowers composite F&B slots through the
+    braided overlap-aware chunk executor.
     """
     if runtime == "pjit":
         return PjitRunner(cfg, oc)
@@ -192,7 +196,7 @@ def make_runner(runtime: str, cfg: ModelConfig, oc: OptConfig,
         mb = dc.global_batch // dc.microbatches
         return SpmdRunner(cfg, oc, schedule, pp, dc.microbatches,
                           (mb, dc.seq_len), tp=tp, mesh=mesh,
-                          fuse_slots=fuse_slots)
+                          fuse_slots=fuse_slots, braid_tp=braid_tp)
     if runtime == "pipeline":
         return ReferenceRunner(cfg, oc, schedule, pp, dc.microbatches)
     raise ValueError(f"unknown runtime {runtime!r}")

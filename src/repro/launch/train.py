@@ -62,6 +62,9 @@ def main():
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--braid-tp", action="store_true",
+                    help="spmd only: run composite F&B slots through the "
+                         "braided overlap-aware chunk executor")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -74,7 +77,7 @@ def main():
                     microbatches=args.microbatches)
 
     runner = make_runner(args.runtime, cfg, oc, dc, schedule=args.schedule,
-                         pp=args.pp, tp=args.tp)
+                         pp=args.pp, tp=args.tp, braid_tp=args.braid_tp)
     start = 0
     if args.ckpt and Path(args.ckpt, "meta.json").exists():
         params, opt, start, _ = load_canonical(args.ckpt, cfg)

@@ -24,7 +24,7 @@ from repro.core import autograd as ag
 from repro.models import ssm, units
 from repro.models.attention_core import flash_attention_inference
 from repro.models.config import LayerSpec, ModelConfig
-from repro.tp.context import TPContext
+from repro.tp.context import OverlapTP, PendingPsum, TPContext
 
 
 # ---------------------------------------------------------------------------
@@ -140,6 +140,167 @@ def chunk_bwd_act(layer_params, tp, ctxs, gy, specs, cfg):
 
 def chunk_bwd_weight(wtapes, specs):
     return [layer_bwd_weight(wt, spec) for wt, spec in zip(wtapes, specs)]
+
+
+# --- braided composite executor (paper §4, Fig. 1) -------------------------
+
+def _braid_f_steps(layer_params, specs, otp, rope, cfg):
+    """One entry per unit of the forward chunk: mixer, then (if present)
+    MLP.  Each step maps x → (y_or_pending, ctx_piece); the unit-output
+    collective comes back as a PendingPsum via the OverlapTP hooks (except
+    MoE, whose output is a plain residual add)."""
+    steps = []
+    for p, spec in zip(layer_params, specs):
+        def mix_step(x, p=p, spec=spec):
+            x_ln, c_ln1 = units.prenorm_fwd(p["ln1"], x, cfg)
+            y, c_mix = MIXER_FWD[spec.mixer](p["mixer"], otp, x_ln, x, rope,
+                                             spec, cfg)
+            return y, (c_ln1, c_mix)
+        steps.append(mix_step)
+        if spec.mlp != "none":
+            def mlp_step(x, p=p, spec=spec):
+                mlp_fwd, _, _ = _mlp_fns(spec)
+                x_ln2, c_ln2 = units.prenorm_fwd(p["ln2"], x, cfg)
+                y, c_mlp = mlp_fwd(p["mlp"], otp, x_ln2, x, spec, cfg)
+                return y, (c_ln2, c_mlp)
+            steps.append(mlp_step)
+    return steps
+
+
+def _braid_b_steps(layer_params, ctxs, specs, otp, cfg):
+    """One entry per unit of the backward-act chunk, in execution (reversed)
+    order: MLP bwd then mixer bwd per layer.  Each step maps
+    gy → (gx_ln_or_pending, post) where ``post(gx_ln)`` finishes the unit —
+    prenorm backward plus the Eq. (2) residual re-attach — and returns
+    (gy_next, (wtape_piece, joint_piece, j_ln))."""
+    steps = []
+    for p, c, spec in zip(reversed(layer_params), reversed(ctxs),
+                          reversed(specs)):
+        c_ln1, c_mix, c_ln2, c_mlp = c
+        if spec.mlp != "none":
+            def bmlp_step(gy, p=p, c_ln2=c_ln2, c_mlp=c_mlp, spec=spec):
+                _, mlp_bwd_act, _ = _mlp_fns(spec)
+                r, g_res2, wt, j = mlp_bwd_act(p["mlp"], otp, c_mlp, gy,
+                                               spec, cfg)
+                def post(gx_ln2):
+                    g_from, j_ln2 = units.prenorm_bwd(c_ln2, gx_ln2, cfg)
+                    return g_from + g_res2, (wt, j, j_ln2)
+                return r, post
+            steps.append(bmlp_step)
+        def bmix_step(gy, p=p, c_ln1=c_ln1, c_mix=c_mix, spec=spec):
+            r, g_res1, wt, j = MIXER_BWD_ACT[spec.mixer](p["mixer"], otp,
+                                                         c_mix, gy, spec, cfg)
+            def post(gx_ln1):
+                g_from, j_ln1 = units.prenorm_bwd(c_ln1, gx_ln1, cfg)
+                return g_from + g_res1, (wt, j, j_ln1)
+            return r, post
+        steps.append(bmix_step)
+    return steps
+
+
+def _braid_finish(v):
+    return v.finish() if isinstance(v, PendingPsum) else v
+
+
+def chunk_fwd_bwd_braided(f_layer_params, x, b_layer_params, b_ctxs, gy,
+                          tp: TPContext, rope, specs, cfg: ModelConfig):
+    """Interleave a forward chunk with a backward-act chunk at unit
+    granularity so each side's TP collective hides under the partner's
+    matmuls (paper §4, Fig. 1).
+
+    Numerically equivalent to
+
+        y, f_ctxs = chunk_fwd(f_layer_params, tp, x, rope, specs, cfg)
+        gx, wts, js = chunk_bwd_act(b_layer_params, tp, b_ctxs, gy, specs, cfg)
+
+    (bitwise at ``tp.size <= 2``; ring reassociation beyond that) and
+    returns ``(y, f_ctxs, gx, wts, js)``.
+
+    Interleave order per steady-state iteration — F-ring, B-compute, B-ring,
+    F-compute — is chosen so that every ring chain has the *partner* side's
+    matmuls between its hops and its first dependent matmul:
+
+        [F_{i} ring] [B_j compute] [B_j ring] [F_{i+1} compute] ...
+
+    The F_i ring's result is next consumed by F_{i+1}'s compute, with B_j's
+    matmuls in between; the B_j ring's result is consumed by B_{j+1}'s
+    compute, with F_{i+1}'s matmuls in between.  Units whose output is not a
+    deferrable collective (MoE) degrade gracefully: the braid still
+    alternates their compute with the partner's.
+
+    Trace order alone does not survive compilation: XLA's sequential
+    (memory-minimizing) scheduler freely hoists the partner's independent
+    matmuls away from the ring hops they are meant to hide.  Each
+    interleave point is therefore pinned with ``lax.optimization_barrier``
+    tying (own-side state, partner state).  The barrier is an element-wise
+    identity — dataflow still keeps the partner's matmuls independent of
+    the ring (no value crosses elements; bitwise-equality tests hold) —
+    but the scheduler must now place them after the hops and before the
+    ring's consumer.
+    """
+    otp = OverlapTP(tp)
+    f_steps = _braid_f_steps(f_layer_params, specs, otp, rope, cfg)
+    b_steps = _braid_b_steps(b_layer_params, b_ctxs, specs, otp, cfg)
+
+    f_pieces, b_pieces = [], []
+    pend_f = None
+    state_f, state_b = x, gy
+    fi = bi = 0
+    while fi < len(f_steps) or bi < len(b_steps) or pend_f is not None:
+        # F-side ring hops: traced here, immediately before the B unit's
+        # matmuls, which are what hide them.
+        if pend_f is not None:
+            state_f = _braid_finish(pend_f)
+            pend_f = None
+            # B compute must be scheduled after the F hops it hides.
+            state_f, state_b = jax.lax.optimization_barrier(
+                (state_f, state_b))
+        # B unit compute, then its ring — hidden under the F unit below.
+        if bi < len(b_steps):
+            r, post = b_steps[bi](state_b)
+            bi += 1
+            state_b, piece = post(_braid_finish(r))
+            b_pieces.append(piece)
+            # F compute must be scheduled after the B dots (so they sit
+            # inside the F ring's window) and after the B hops it hides.
+            state_f, state_b = jax.lax.optimization_barrier(
+                (state_f, state_b))
+        # F unit compute; its pending finishes next iteration.
+        if fi < len(f_steps):
+            pend_f, piece = f_steps[fi](state_f)
+            fi += 1
+            f_pieces.append(piece)
+    y, gx = state_f, state_b
+
+    # Reassemble chunk_fwd's per-layer ctx tuples from the unit pieces.
+    f_ctxs, it = [], iter(f_pieces)
+    for spec in specs:
+        c_ln1, c_mix = next(it)
+        if spec.mlp == "none":
+            f_ctxs.append((c_ln1, c_mix, None, None))
+        else:
+            c_ln2, c_mlp = next(it)
+            f_ctxs.append((c_ln1, c_mix, c_ln2, c_mlp))
+
+    # Reassemble chunk_bwd_act's per-layer wtape/joint dicts (reversed-order
+    # pieces → layer order, mirroring layer_bwd_act's key structure).
+    wtapes, joints, it = [], [], iter(b_pieces)
+    for spec in reversed(specs):
+        wtape, joint = {}, {}
+        if spec.mlp != "none":
+            wt_mlp, j_mlp, j_ln2 = next(it)
+            wtape["mlp"] = wt_mlp
+            if j_mlp:
+                joint["mlp"] = j_mlp
+            joint["ln2"] = j_ln2
+        wt_mix, j_mix, j_ln1 = next(it)
+        wtape["mixer"] = wt_mix
+        if j_mix:
+            joint["mixer"] = j_mix
+        joint["ln1"] = j_ln1
+        wtapes.append(wtape)
+        joints.append(joint)
+    return y, f_ctxs, gx, wtapes[::-1], joints[::-1]
 
 
 # ---------------------------------------------------------------------------
@@ -499,7 +660,7 @@ def moe_decode(params, tp: TPContext, x_ln, x_res, cfg: ModelConfig):
     part = jnp.einsum("tkd,tk->td", out,
                       gates.reshape(b * s, moe.top_k).astype(out.dtype))
     part = part.reshape(b, s, d).astype(x_res.dtype)
-    return tp.psum(part) + x_res if tp.axis else part + x_res
+    return tp.fuse_residual(part, x_res)
 
 
 def init_caches_stacked(cfg: ModelConfig, batch: int, max_seq: int,

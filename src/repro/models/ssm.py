@@ -184,8 +184,8 @@ def mamba_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
     g_a = ag.linear_bwd_act(gy, params["w_out"])
     core_pgrads, (g_x, g_z) = ag.core_bwd(mamba_core_fn(cfg, tp), core_saved,
                                           g_a)
-    gx_ln = tp.psum(ag.linear_bwd_act(g_x, params["w_in_x"])
-                    + ag.linear_bwd_act(g_z, params["w_in_z"]))
+    gx_ln = tp.psum_out(ag.linear_bwd_act(g_x, params["w_in_x"])
+                        + ag.linear_bwd_act(g_z, params["w_in_z"]))
     wtape = {"w_in_x": ag.tape_entry(x_ln, g_x),
              "w_in_z": ag.tape_entry(x_ln, g_z),
              "w_out": ag.tape_entry(a, gy)}
@@ -324,8 +324,8 @@ def mlstm_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
             + jnp.einsum("bsh,hd->bshd", gft, params["wf"]))
     b, s = g_xh.shape[:2]
     g_xu = g_xh.reshape(b, s, nh * hd)
-    gx_ln = tp.psum(ag.linear_bwd_act(g_xu, params["w_upx"])
-                    + ag.linear_bwd_act(gz, params["w_upz"]))
+    gx_ln = tp.psum_out(ag.linear_bwd_act(g_xu, params["w_upx"])
+                        + ag.linear_bwd_act(gz, params["w_upz"]))
     wtape = {"w_upx": ag.tape_entry(x_ln, g_xu),
              "w_upz": ag.tape_entry(x_ln, gz),
              "wq": ag.tape_entry(xh, gq), "wk": ag.tape_entry(xh, gk),
@@ -445,7 +445,7 @@ def slstm_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
     nh = params["core"]["r"].shape[1]
     core = slstm_core_fn(nh, du // nh)
     core_pgrads, (g_xw,) = ag.core_bwd(core, core_saved, g_a)
-    gx_ln = tp.psum(ag.linear_bwd_act(g_xw, params["w_x"]))
+    gx_ln = tp.psum_out(ag.linear_bwd_act(g_xw, params["w_x"]))
     wtape = {"w_x": ag.tape_entry(x_ln, g_xw), "w_down": ag.tape_entry(a, gy)}
     return gx_ln, g_res, wtape, {"core": core_pgrads}
 

@@ -134,9 +134,9 @@ def attn_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
     g_res = gy                                     # Eq. (2) "+1" term
     g_a = ag.linear_bwd_act(gy, params["wo"])
     core_pgrads, (gq, gk, gv, _, _) = ag.core_bwd(core, core_saved, g_a)
-    gx_ln = tp.psum(ag.linear_bwd_act(gq, params["wq"])
-                    + ag.linear_bwd_act(gk, params["wk"])
-                    + ag.linear_bwd_act(gv, params["wv"]))
+    gx_ln = tp.psum_out(ag.linear_bwd_act(gq, params["wq"])
+                        + ag.linear_bwd_act(gk, params["wk"])
+                        + ag.linear_bwd_act(gv, params["wv"]))
     joint = {k_: tp.psum(v_) for k_, v_ in core_pgrads.items()}
     wtape = {"wq": ag.tape_entry(x_ln, gq), "wk": ag.tape_entry(x_ln, gk),
              "wv": ag.tape_entry(x_ln, gv), "wo": ag.tape_entry(a, gy)}
@@ -185,8 +185,8 @@ def mlp_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
         act = _act_fn(cfg.gated_act)
         core = lambda _, g_, u_: act(g_) * u_
         _, (g_hg, g_hu) = ag.core_bwd(core, core_saved, g_a)
-        gx_ln = tp.psum(ag.linear_bwd_act(g_hg, params["wg"])
-                        + ag.linear_bwd_act(g_hu, params["wu"]))
+        gx_ln = tp.psum_out(ag.linear_bwd_act(g_hg, params["wg"])
+                            + ag.linear_bwd_act(g_hu, params["wu"]))
         wtape = {"wg": ag.tape_entry(x_ln, g_hg), "wu": ag.tape_entry(x_ln, g_hu),
                  "wd": ag.tape_entry(a, gy)}
     else:
@@ -194,7 +194,7 @@ def mlp_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
         act = _act_fn(cfg.plain_act)
         core = lambda _, h_: act(h_)
         _, (g_h1,) = ag.core_bwd(core, core_saved, g_a)
-        gx_ln = tp.psum(ag.linear_bwd_act(g_h1, params["w1"]))
+        gx_ln = tp.psum_out(ag.linear_bwd_act(g_h1, params["w1"]))
         wtape = {"w1": ag.tape_entry(x_ln, g_h1), "w2": ag.tape_entry(a, gy)}
     return gx_ln, g_res, wtape, {}
 

@@ -200,7 +200,8 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                       m: int, mb_shape, param_trees, *,
                       stage_axis: str = "stage",
                       model_axis: Optional[str] = None,
-                      fuse: bool = True, ablate: Optional[str] = None):
+                      fuse: bool = True, ablate: Optional[str] = None,
+                      braid_tp: bool = False):
     """Build the per-device slot program ``run(c0, c1, embed_p, head_p,
     tokens, labels) -> (loss, g0, g1, g_embed, g_head)`` to be wrapped in
     ``shard_map`` — shared by the grads-only step and the fused train step.
@@ -227,10 +228,19 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     split (numerics are meaningless): ``"exchange"`` elides every ppermute;
     ``"compute"`` replaces branch bodies with buffer-touching stubs that
     keep the dispatch + exchange structure (and a loss data-dependence so
-    XLA cannot dead-code it); ``"both"`` applies both.
+    XLA cannot dead-code it); ``"both"`` applies both; ``"tp"`` executes
+    the full model math with an identity TPContext (no model-axis
+    collectives; shard shapes keep the real TP size), isolating the
+    TP-collective share of the wall clock.
+
+    ``braid_tp`` lowers composite F&B slots through the braided chunk
+    executor (``model.chunk_fwd_bwd_braided``): unit-interleaved partner
+    chunks with ring-decomposed output collectives, instead of the
+    sequential chunk_f-then-chunk_b composition.
     """
-    assert ablate in (None, "exchange", "compute", "both")
+    assert ablate in (None, "exchange", "compute", "both", "tp")
     do_exchange = ablate not in ("exchange", "both")
+    braid = braid_tp and ablate not in ("compute", "both")
     p = pl.p
     two_chunks = pl.kind != "flat"
     grid = SL.to_slots(tables, pl)
@@ -240,8 +250,16 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                         if s in wiring["up"] + wiring["dn"])
     grad_streams = tuple(s for s in ("g0", "g1")
                          if s in wiring["up"] + wiring["dn"])
+    # safe_ring: braided ring hops run inside lax.switch arms that only
+    # some stage rows take; ppermute would deadlock there (XLA:CPU
+    # rendezvouses collective-permute globally), so hops lower as per-group
+    # one-hot psums instead.
     tp = TPContext(axis=model_axis,
-                   size=(mesh.shape[model_axis] if model_axis else 1))
+                   size=(mesh.shape[model_axis] if model_axis else 1),
+                   safe_ring=True)
+    # ablate="tp": execute with an identity context (no model-axis
+    # collectives) while `tp` keeps the real size for shard shapes.
+    tp_exec = TPContext() if ablate == "tp" else tp
     lvs = stages_per_chunk(cfg, p, pl.kind)
     specs0 = cfg.layers[:lvs]                           # uniform stacks
     bmb, seq = mb_shape
@@ -249,15 +267,23 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     scale = 1.0 / m
     rope = M._rope_for(cfg, seq)
 
-    def chunk_f(cparams, x, tpc=tp):
+    def chunk_f(cparams, x, tpc=tp_exec):
         layers = [jax.tree.map(lambda a: a[i], cparams)
                   for i in range(lvs)]
         return M.chunk_fwd(layers, tpc, x, rope, specs0, cfg)
 
-    def chunk_b(cparams, ctxs, gy, tpc=tp):
+    def chunk_b(cparams, ctxs, gy, tpc=tp_exec):
         layers = [jax.tree.map(lambda a: a[i], cparams)
                   for i in range(lvs)]
         return M.chunk_bwd_act(layers, tpc, ctxs, gy, specs0, cfg)
+
+    def chunk_fb(f_cparams, x, b_cparams, ctxs, gy):
+        f_layers = [jax.tree.map(lambda a: a[i], f_cparams)
+                    for i in range(lvs)]
+        b_layers = [jax.tree.map(lambda a: a[i], b_cparams)
+                    for i in range(lvs)]
+        return M.chunk_fwd_bwd_braided(f_layers, x, b_layers, ctxs, gy,
+                                       tp_exec, rope, specs0, cfg)
 
     def chunk_w(tapes):
         return M.chunk_bwd_weight(tapes, specs0)
@@ -341,14 +367,16 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                          for s in grad_streams)
 
         def _head_f(carry, mb, y):
-            loss, hctx = M.head_fwd(head_p, tp, y, _read(labels, mb), cfg)
+            loss, hctx = M.head_fwd(head_p, tp_exec, y, _read(labels, mb),
+                                    cfg)
             return dict(carry,
                         hctx=_write(carry["hctx"], mb, hctx),
                         loss=carry["loss"].at[mb].set(loss))
 
         def _head_b(carry, mb):
             gy, htape, hjoint = M.head_bwd_act(
-                head_p, tp, _read(carry["hctx"], mb), jnp.float32(1.0), cfg)
+                head_p, tp_exec, _read(carry["hctx"], mb), jnp.float32(1.0),
+                cfg)
             carry = dict(carry,
                          htape=_write(carry["htape"], mb, htape),
                          ah=add_partial(carry["ah"], hjoint))
@@ -540,6 +568,85 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
         b_branches = [bdefs[n] for n in SL.B_BRANCHES[pl.kind]]
         w_branches = [wdefs[n] for n in SL.W_BRANCHES[pl.kind]]
 
+        # ---- braided composite F&B arms (paper §4, Fig. 1) --------------
+        # A composite slot (both F and B active) lowers as ONE braided
+        # chunk call instead of chunk_f-then-chunk_b, so each side's TP ring
+        # hops interleave with the partner's matmuls.  The per-branch
+        # source/emit plumbing is factored out of the f*/b* branch bodies
+        # above so the braided arm reproduces them exactly.
+        F_SRC = {"f0": "x0", "f0_embed": None, "f0_turn": "x0",
+                 "f0_send1": "x0", "f0_loss": "x0", "f1": "x1",
+                 "f1_loss": "x1"}
+        F_CHUNK = {"f0": 0, "f0_embed": 0, "f0_turn": 0, "f0_send1": 0,
+                   "f0_loss": 0, "f1": 1, "f1_loss": 1}
+        B_CHUNK = {"b0": 0, "b0_embed": 0, "b0_loss": 0, "b1": 1,
+                   "b1_turn": 1, "b1_send0": 1, "b1_loss": 1}
+
+        def _embed_x(mb):
+            batch = ({"tokens": _read(tokens, mb)} if cfg.frontend == "text"
+                     else {"embeds": _read(tokens, mb)})
+            x, _ = M.embed_fwd(embed_p, batch, cfg)
+            return x
+
+        def _f_emit(name, carry, mb, y):
+            if name in ("f0", "f0_embed"):
+                return carry, acts_out(x0=(y, jnp.int32(1)))
+            if name in ("f0_send1", "f1"):
+                return carry, acts_out(x1=(y, jnp.int32(1)))
+            if name == "f0_turn":
+                return dict(carry, x1=_write(carry["x1"], mb, y)), acts_out()
+            return _head_f(carry, mb, y), acts_out()    # f0_loss / f1_loss
+
+        def _b_gy(name, carry, mb):
+            if name in ("b0_loss", "b1_loss"):
+                return _head_b(carry, mb)
+            return carry, _read(carry["g0" if B_CHUNK[name] == 0 else "g1"],
+                                mb)
+
+        def _b_emit(name, carry, mb, gx):
+            if name == "b0_embed":
+                batch = ({"tokens": _read(tokens, mb)}
+                         if cfg.frontend == "text"
+                         else {"embeds": _read(tokens, mb)})
+                _, ectx = M.embed_fwd(embed_p, batch, cfg)
+                ge = M.embed_bwd_weight(embed_p, ectx, gx)
+                return (dict(carry, ae=add_partial(carry["ae"], ge)),
+                        grads_out())
+            if name in ("b0", "b0_loss", "b1_send0"):
+                return carry, grads_out(g0=(gx, jnp.int32(1)))
+            if name == "b1_turn":
+                return (dict(carry, g0=_write(carry["g0"], mb, gx)),
+                        grads_out())
+            return carry, grads_out(g1=(gx, jnp.int32(1)))   # b1 / b1_loss
+
+        def braided_fb(fname, bname):
+            fck, bck = F_CHUNK[fname], B_CHUNK[bname]
+            fcp = c0 if fck == 0 else c1
+            bcp = c0 if bck == 0 else c1
+            fctx_key = "ctx0" if fck == 0 else "ctx1"
+            bctx_key = "ctx0" if bck == 0 else "ctx1"
+            tape_key = "tape0" if bck == 0 else "tape1"
+            ak = "a0" if bck == 0 else "a1"
+            src = F_SRC[fname]
+
+            def fb(carry, fmb, bmb_):
+                x = _embed_x(fmb) if src is None else _read(carry[src], fmb)
+                ctxs_in = _read(carry[bctx_key], bmb_)
+                carry, gy = _b_gy(bname, carry, bmb_)
+                y, ctxs, gx, tapes, joints = chunk_fb(fcp, x, bcp, ctxs_in,
+                                                      gy)
+                carry = dict(carry, **{
+                    fctx_key: _write(carry[fctx_key], fmb, ctxs)})
+                carry[tape_key] = _write(carry[tape_key], bmb_, tapes)
+                acc = carry[ak]
+                for i, j in enumerate(joints):
+                    acc = add_layer(acc, i, j)
+                carry[ak] = acc
+                carry, acts = _f_emit(fname, carry, fmb, y)
+                carry, grads = _b_emit(bname, carry, bmb_, gx)
+                return carry, acts, grads
+            return fb
+
         # ---- slot body --------------------------------------------------
         me = jax.lax.axis_index(stage_axis)
         if wiring["wrap"]:
@@ -550,14 +657,7 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
             perm_dn = [(s, s - 1) for s in range(1, p)]
         perm_of = {"up": perm_up, "dn": perm_dn}
 
-        def generic_slot(carry, codes_t):
-            my = codes_t[me]
-            fmb, bmb_, wmb = my[1], my[3], my[5]
-            carry, acts = jax.lax.switch(my[0], f_branches, carry, fmb)
-            carry, grads = jax.lax.switch(my[2], b_branches, carry, bmb_)
-            carry = jax.lax.switch(my[4], w_branches, carry, wmb)
-            if not do_exchange:
-                return carry, None
+        def _exchange(carry, acts, grads, fmb, bmb_):
             # exchange.  mb indices are sent +1 so that the zeros a device
             # receives when it has no upstream decode as "invalid" and land
             # in the scratch row m.
@@ -578,7 +678,54 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                     row = jnp.where(mbidx > 0, mbidx - 1, m)
                     carry = dict(carry,
                                  **{s: _write(carry[s], row, val)})
-            return carry, None
+            return carry
+
+        def generic_slot(carry, codes_t):
+            my = codes_t[me]
+            fmb, bmb_, wmb = my[1], my[3], my[5]
+            carry, acts = jax.lax.switch(my[0], f_branches, carry, fmb)
+            carry, grads = jax.lax.switch(my[2], b_branches, carry, bmb_)
+            carry = jax.lax.switch(my[4], w_branches, carry, wmb)
+            if not do_exchange:
+                return carry, None
+            return _exchange(carry, acts, grads, fmb, bmb_), None
+
+        def generic_braid_slot(carry, xs_t):
+            """Generic lowering under braid_tp: F and B dispatch through one
+            joint switch over the grid's distinct static (F, B) role pairs
+            so composite pairs can lower as a single braided call."""
+            codes_t, pc_t = xs_t
+            my = codes_t[me]
+            fmb, bmb_, wmb = my[1], my[3], my[5]
+            carry, acts, grads = jax.lax.switch(pc_t[me], pair_arms, carry,
+                                                fmb, bmb_)
+            carry = jax.lax.switch(my[4], w_branches, carry, wmb)
+            if not do_exchange:
+                return carry, None
+            return _exchange(carry, acts, grads, fmb, bmb_), None
+
+        if braid and not fuse:
+            fb_names = SL.F_BRANCHES[pl.kind]
+            bb_names = SL.B_BRANCHES[pl.kind]
+            pairs = sorted({(int(c[0]), int(c[2]))
+                            for c in codes_np.reshape(-1, 6)})
+            pair_codes = np.array(
+                [[pairs.index((int(codes_np[t, d, 0]),
+                               int(codes_np[t, d, 2])))
+                  for d in range(p)]
+                 for t in range(codes_np.shape[0])], np.int32)
+
+            def pair_arm(fc, bc):
+                if fc > 0 and bc > 0:
+                    return braided_fb(fb_names[fc], bb_names[bc])
+
+                def seq(carry, fmb, bmb_):
+                    carry, acts = f_branches[fc](carry, fmb)
+                    carry, grads = b_branches[bc](carry, bmb_)
+                    return carry, acts, grads
+                return seq
+
+            pair_arms = [pair_arm(fc, bc) for fc, bc in pairs]
 
         def run_segment(carry, seg):
             """Fused lowering of one periodic segment: branch bodies
@@ -592,9 +739,19 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
             k = seg.period
 
             def arm_of(fc, bc, wc):
+                wf = w_branches[wc]
+                if braid and fc > 0 and bc > 0:
+                    fb = braided_fb(SL.F_BRANCHES[pl.kind][fc],
+                                    SL.B_BRANCHES[pl.kind][bc])
+
+                    def braided_arm(carry, mb3):
+                        carry, acts, grads = fb(carry, mb3[0], mb3[1])
+                        carry = wf(carry, mb3[2])
+                        return (carry, tuple(v for v, _ in acts),
+                                tuple(v for v, _ in grads))
+                    return braided_arm
                 ff = f_branches[fc]
                 bf = b_branches[bc]
-                wf = w_branches[wc]
 
                 def arm(carry, mb3):
                     carry, acts = ff(carry, mb3[0])
@@ -654,6 +811,10 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
         if fuse:
             for seg in SL.segment_grid(codes_np, pl.kind):
                 carry = run_segment(carry, seg)
+        elif braid:
+            carry, _ = jax.lax.scan(generic_braid_slot, carry,
+                                    (jnp.asarray(codes_np),
+                                     jnp.asarray(pair_codes)))
         else:
             carry, _ = jax.lax.scan(generic_slot, carry,
                                     jnp.asarray(codes_np))
@@ -683,7 +844,8 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                         stage_axis: str = "stage",
                         model_axis: Optional[str] = None,
                         fuse_slots: bool = True,
-                        ablate: Optional[str] = None):
+                        ablate: Optional[str] = None,
+                        braid_tp: bool = False):
     """Returns a jitted SPMD function
     ``step(c0, c1, embed_p, head_p, tokens, labels) -> (loss, g0, g1,
     g_embed, g_head)`` executing the schedule over the ``stage`` (and
@@ -697,11 +859,13 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
 
     ``fuse_slots`` selects the fused segment lowering (default) vs the
     generic one-switch-per-slot scan; ``ablate`` builds the benchmark-only
-    cost-breakdown variants (see ``_pipeline_program``).
+    cost-breakdown variants; ``braid_tp`` routes composite F&B slots
+    through the braided overlap-aware chunk executor (see
+    ``_pipeline_program``).
     """
     run = _pipeline_program(cfg, tables, pl, mesh, m, mb_shape, param_trees,
                             stage_axis=stage_axis, model_axis=model_axis,
-                            fuse=fuse_slots, ablate=ablate)
+                            fuse=fuse_slots, ablate=ablate, braid_tp=braid_tp)
     rep = P()
     sp = stage_param_specs(param_trees, stage_axis=stage_axis,
                            model_axis=model_axis)
@@ -748,7 +912,8 @@ def build_pipeline_train_step(cfg: ModelConfig, tables, pl: Placement,
                               oc: OptConfig, *,
                               stage_axis: str = "stage",
                               model_axis: Optional[str] = None,
-                              fuse_slots: bool = True):
+                              fuse_slots: bool = True,
+                              braid_tp: bool = False):
     """Fused pipeline *train* step: schedule execution, global-norm
     clipping and the AdamW update all under one ``shard_map`` — stacked
     params and optimizer moments never leave the mesh between steps.
@@ -767,7 +932,7 @@ def build_pipeline_train_step(cfg: ModelConfig, tables, pl: Placement,
     """
     run = _pipeline_program(cfg, tables, pl, mesh, m, mb_shape, param_trees,
                             stage_axis=stage_axis, model_axis=model_axis,
-                            fuse=fuse_slots)
+                            fuse=fuse_slots, braid_tp=braid_tp)
     sp = stage_param_specs(param_trees, stage_axis=stage_axis,
                            model_axis=model_axis)
     ospec = {"mu": sp, "nu": sp, "step": P()}

@@ -12,6 +12,27 @@ forward functions in ``repro.models.units``):
   identity and the residual is added plainly (no detach — gradient flows
   through the residual normally, which is what Eq. (2)'s "+1" reproduces by
   hand in unit mode).
+
+Overlap-aware decomposition (§4, Fig. 1)
+----------------------------------------
+
+``psum`` is a single blocking ``lax.psum``; nothing can hide under it.  The
+decomposed form expresses the same all-reduce as a ring reduce-scatter
+followed by a ring all-gather, built from ``lax.ppermute`` hops over tiles of
+the feature dimension — ``2*(t-1)`` hops of ``F/t`` elements each.  The split
+``start_psum``/``finish_psum`` API returns a :class:`PendingPsum` whose hops
+are traced lazily, one per ``step()``, so an executor can issue partner-chunk
+matmuls *between* the hops of an in-flight reduction (the braided composite
+executor in ``repro.models.model.chunk_fwd_bwd_braided`` does exactly this).
+
+Units never call the ring form directly.  Instead every unit routes its
+*output* collective — the last psum of a unit, whose result is only consumed
+by the *next* unit — through ``psum_out``/``fuse_residual``.  On the base
+context both are the monolithic reference path; :class:`OverlapTP` overrides
+exactly those two hooks to return pendings, leaving interior collectives
+(mamba's bcdt reduce, MoE's expert combine, attention's joint-grad psums, the
+vocab-parallel softmax stats) blocking, since their results are consumed
+immediately inside the unit.
 """
 from __future__ import annotations
 
@@ -22,15 +43,124 @@ import jax
 import jax.numpy as jnp
 
 
+def _ring_hop(x, axis: str, t: int, safe: bool):
+    """One +1 ring shift over ``axis``: rank ``r`` receives rank
+    ``(r - 1) % t``'s value.
+
+    ``safe=False`` is a single ``ppermute`` — the bandwidth-optimal form,
+    but XLA:CPU rendezvouses collective-permute over *all* devices of the
+    computation (not just the ``source_target_pairs`` group), so it
+    deadlocks whenever only some mesh rows reach it — e.g. inside a
+    ``lax.switch`` arm of the pipeline's slot dispatch, where stage rows
+    take different branches.  ``safe=True`` emulates the shift with a
+    one-hot masked ``psum``: all-reduce rendezvous is per replica group,
+    so disjoint TP groups may execute it independently, at ``t`` x the hop
+    bandwidth.  Values are identical (each output slot has exactly one
+    non-zero contributor).
+    """
+    if not safe:
+        return jax.lax.ppermute(x, axis, [(i, (i + 1) % t) for i in range(t)])
+    r = jax.lax.axis_index(axis)
+    sel = (jnp.arange(t) == (r + 1) % t).reshape((t,) + (1,) * x.ndim)
+    g = jax.lax.psum(jnp.where(sel, x[None], jnp.zeros((), x.dtype)), axis)
+    return jax.lax.dynamic_index_in_dim(g, r, 0, keepdims=False)
+
+
+def _ring_psum_stages(axis: str, t: int, x, ax: int, safe: bool = False):
+    """Generator tracing one ring hop per ``next()``; the final ``next()``
+    yields the fully reduced array (all earlier ones yield ``None``).
+
+    Reduce-scatter: tile the reduced axis into ``t`` chunks; after hop ``s``
+    rank ``r`` holds the partial sum of tile ``(r - s) % t`` over ranks
+    ``{r-s, ..., r}``, so after ``t-1`` hops it owns tile ``(r+1) % t``
+    fully reduced.  All-gather: circulate the owned tiles the rest of the way
+    round the ring, scattering each into its slot of the output.
+    """
+    r = jax.lax.axis_index(axis)
+    xs = jnp.stack(jnp.split(x, t, axis=ax))        # (t, ..., F/t, ...)
+
+    def tile(i):
+        return jax.lax.dynamic_index_in_dim(xs, i % t, 0, keepdims=False)
+
+    acc = tile(r)
+    for s in range(1, t):
+        acc = _ring_hop(acc, axis, t, safe) + tile(r - s)
+        yield None
+    out = jnp.zeros_like(xs)
+    out = jax.lax.dynamic_update_index_in_dim(out, acc, (r + 1) % t, 0)
+    buf = acc
+    for s in range(1, t):
+        buf = _ring_hop(buf, axis, t, safe)
+        out = jax.lax.dynamic_update_index_in_dim(out, buf, (r - s + 1) % t, 0)
+        yield None
+    yield jnp.concatenate([out[i] for i in range(t)], axis=ax)
+
+
+class PendingPsum:
+    """An all-reduce in flight, decomposed into ring hops.
+
+    ``step()`` traces one hop (a ``ppermute`` plus a tile add, or the final
+    reassembly); ``finish()`` runs whatever hops remain and returns the
+    reduced value.  Degenerate cases — no TP axis, ``size == 1``, or a tile
+    axis not divisible by ``size`` — fall back to the monolithic collective
+    and complete in a single step, so callers can treat every unit-output
+    collective uniformly.
+    """
+
+    def __init__(self, axis: Optional[str], size: int, x, tile_axis: int = -1,
+                 safe: bool = False):
+        self.axis, self.size = axis, size
+        self.n_steps = 0
+        self._value = None
+        if axis is None:
+            self._gen = iter([x])
+        else:
+            ax = tile_axis % x.ndim
+            if size == 1 or x.shape[ax] == 0 or x.shape[ax] % size:
+                self._gen = iter([jax.lax.psum(x, axis)])
+            else:
+                self._gen = _ring_psum_stages(axis, size, x, ax, safe)
+
+    @property
+    def done(self) -> bool:
+        return self._value is not None
+
+    def step(self) -> "PendingPsum":
+        """Trace one ring hop (no-op once complete)."""
+        if self._value is None:
+            nxt = next(self._gen)
+            self.n_steps += 1
+            if nxt is not None:
+                self._value = nxt
+        return self
+
+    def finish(self):
+        while self._value is None:
+            self.step()
+        return self._value
+
+
 @dataclass(frozen=True)
 class TPContext:
     axis: Optional[str] = None
     size: int = 1
+    # Ring hops as one-hot masked psums instead of ppermute — required when
+    # the ring may execute inside divergent control flow (different mesh
+    # rows taking different ``lax.switch`` arms): XLA:CPU collective-permute
+    # rendezvouses over all devices and deadlocks there, while all-reduce
+    # rendezvous is per replica group.  See ``_ring_hop``.
+    safe_ring: bool = False
 
     def psum(self, x):
         if self.axis is None:
             return x
         return jax.lax.psum(x, self.axis)
+
+    def psum_out(self, x):
+        """The unit-OUTPUT collective: the last psum of a bwd_act unit, whose
+        result feeds only the *next* unit.  Identical to ``psum`` here; the
+        hook exists so :class:`OverlapTP` can defer exactly these."""
+        return self.psum(x)
 
     def pmax(self, x):
         if self.axis is None:
@@ -55,3 +185,65 @@ class TPContext:
             return partial + residual
         return jax.lax.psum(
             partial + jax.lax.stop_gradient(residual) / self.size, self.axis)
+
+    # ---- decomposed (ring) forms ---------------------------------------
+
+    def start_psum(self, x, tile_axis: int = -1) -> PendingPsum:
+        """Begin a decomposed all-reduce; hops trace on ``step()``/``finish()``."""
+        return PendingPsum(self.axis, self.size, x, tile_axis,
+                           safe=self.safe_ring)
+
+    def finish_psum(self, pending: PendingPsum):
+        return pending.finish()
+
+    def ring_psum(self, x, tile_axis: int = -1):
+        """Monolithic-equivalent convenience: start + finish in one call.
+        Bitwise equal to ``psum`` at ``size <= 2``; reassociated (so only
+        approximately equal) beyond that."""
+        return self.start_psum(x, tile_axis).finish()
+
+    def start_fused_residual(self, partial, residual,
+                             tile_axis: int = -1) -> PendingPsum:
+        """Ring form of Eq. (1): defer ``fuse_residual`` as a PendingPsum."""
+        if self.axis is None:
+            return PendingPsum(None, 1, partial + residual)
+        return PendingPsum(
+            self.axis, self.size,
+            partial + jax.lax.stop_gradient(residual) / self.size, tile_axis,
+            safe=self.safe_ring)
+
+
+class OverlapTP:
+    """Deferring proxy over a :class:`TPContext` for the braided executor.
+
+    Unit-output collectives (``fuse_residual`` / ``psum_out``) come back as
+    :class:`PendingPsum` objects whose ring hops the caller schedules between
+    partner-chunk matmuls; everything else (interior ``psum``, ``pmax``,
+    ``axis_index``) stays blocking and delegates to the base context.
+    """
+
+    def __init__(self, base: TPContext):
+        self.base = base
+
+    @property
+    def axis(self):
+        return self.base.axis
+
+    @property
+    def size(self):
+        return self.base.size
+
+    def psum(self, x):
+        return self.base.psum(x)
+
+    def pmax(self, x):
+        return self.base.pmax(x)
+
+    def axis_index(self):
+        return self.base.axis_index()
+
+    def fuse_residual(self, partial, residual) -> PendingPsum:
+        return self.base.start_fused_residual(partial, residual)
+
+    def psum_out(self, x) -> PendingPsum:
+        return self.base.start_psum(x)

@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import flash_attention, rmsnorm
-from repro.kernels.ref import reference_rmsnorm
+from repro.kernels.ops import (flash_attention, matmul_accumulate, rmsnorm)
+from repro.kernels.ref import (reference_matmul_psum_step,
+                               reference_rmsnorm)
 from repro.models.attention_core import (flash_attention as model_flash,
                                          reference_attention)
 
@@ -95,3 +96,29 @@ def test_rmsnorm_row_invariance():
     o1 = rmsnorm(x, g)
     o2 = rmsnorm(x * 7.3, g)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [
+    (8, 16, 8),
+    (128, 128, 128),        # one block exactly
+    (256, 384, 128),        # multi-block grid
+    (7, 33, 65),            # ragged: every dim padded
+    (130, 257, 129),        # pad past one block
+])
+def test_matmul_accumulate_sweep(dtype, m, k, n):
+    """The collective-matmul ring hop (matmul + accumulate fused in the
+    epilogue) against the fp32 oracle — fp32 inputs must be bitwise."""
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (m, k)).astype(dtype)
+    w = jax.random.normal(ks[1], (k, n)).astype(dtype)
+    acc = jax.random.normal(ks[2], (m, n), jnp.float32)
+    o = matmul_accumulate(x, w, acc)
+    r = reference_matmul_psum_step(x, w, acc)
+    assert o.dtype == jnp.float32
+    if dtype == jnp.float32 and k <= 128:
+        # single K step: same fp32 dot + one add as the oracle
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+    else:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   atol=1e-4, rtol=1e-5)
