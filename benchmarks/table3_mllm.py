@@ -1,9 +1,32 @@
-"""Paper Table 3: MLLM training throughput with an imbalanced ViT first
-virtual stage.  PP=4 is workload-balanced (ViT FLOPs ~ one virtual stage);
-PP=2 has a lighter ViT, PP=8 a heavier one (the paper's three regimes)."""
-from repro.core.schedule import run as run_schedule
+"""Paper Table 3: MLLM training with an imbalanced ViT-heavy first stage.
 
-from benchmarks.common import times_for, write_csv
+Default (measured) mode — runs the real SPMD runtime on a fake CPU mesh
+and times cost-balanced per-stage partitions against the naive baseline
+for 1f1b-i / zb-v / stp, plus EP=2 vs EP=1 on the MoE arch, emitting
+``experiments/BENCH_table3.json``.  Three arms per schedule:
+
+  uniform-pad — what the seed executor required: the 10-layer ViT-heavy
+                model padded to 12 layers so ``n_layers % n_vs == 0``,
+                split 3/3/3/3 (the pad layers burn real FLOPs);
+  uniform     — partition-generic executor, cost-blind near-uniform split
+                of the true 10 layers (3/3/2/2);
+  balanced    — ``core.schedule.partition``'s cost-balanced split (the
+                heavy ViT-encoder front sheds layers off stage 0).
+
+Fake-device caveat (ROADMAP): every fake device shares one CPU core, so
+wall-clock measures total executed work, not idle silicon — the padding
+elimination (balanced/uniform vs uniform-pad) is the honestly measurable
+win here, while uniform vs balanced is a FLOPs tie whose bubble-level gap
+only the simulator can rank.  ``--sim`` keeps the original
+simulator-vs-paper CSV (Table 3 numbers).
+
+  PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      python -m benchmarks.table3_mllm [--sim] [--steps N] [--repeats R]
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
 # (model, tp, pp, vit_factor): Table 3 rows at the largest mbs.
 PAPER = {
@@ -15,17 +38,24 @@ PAPER = {
                            "stp": 6.19},
 }
 
+KINDS = ("1f1b-i", "zb-v", "stp")
 
-def main():
+
+def main_sim():
+    """Original simulator-vs-paper CSV (Table 3 throughput numbers)."""
+    from repro.core.schedule import run as run_schedule
+
+    from benchmarks.common import times_for, write_csv
+
     rows = []
     for (model, tp, pp, vit), paper in PAPER.items():
         times = times_for(tp, pp, 5120, t_comm=0.05, vit_factor=vit)
         sim = {}
-        for kind in ("1f1b-i", "zb-v", "stp"):
+        for kind in KINDS:
             res, _, _ = run_schedule(kind, pp, paper["mbs"], times)
             sim[kind] = paper["mbs"] / res.total_time
         scale = paper["1f1b-i"] / sim["1f1b-i"]
-        for kind in ("1f1b-i", "zb-v", "stp"):
+        for kind in KINDS:
             pred = sim[kind] * scale
             rows.append([model, tp, pp, vit, kind, round(pred, 2),
                          paper[kind],
@@ -37,6 +67,134 @@ def main():
     write_csv("table3_mllm",
               ["model", "tp", "pp", "vit_factor", "schedule", "sim",
                "paper", "rel_err"], rows)
+
+
+VIT_FACTOR = 3.0  # stage-0 cost multiplier modeling the resident ViT
+
+
+def _vit_heavy(extra: int = 0):
+    """ViT-heavy MLLM stand-in: 10 identical decoder layers behind a
+    resident ViT encoder co-located on virtual stage 0, modeled by
+    ``vit_factor=VIT_FACTOR`` in the balanced arm (stage 0's layers cost
+    3x, so ``partition`` sheds layers off it — Table 3's imbalance).  10
+    layers over n_vs=4 is deliberately ragged; ``extra`` pad layers model
+    the seed executor's forced round-up to a multiple of n_vs."""
+    from repro.models.config import LayerSpec, ModelConfig
+    return ModelConfig(
+        name=f"vit-heavy-{10 + extra}l", family="vlm", d_model=64,
+        n_heads=4, kv_heads=4, d_ff=128, vocab=128,
+        layers=(LayerSpec(mixer="attn", mlp="gated"),) * (10 + extra),
+        max_seq=4096)
+
+
+def _time(runner, params, batches, warmup, repeats):
+    from benchmarks.common import time_runner
+    state = runner.init_state(params)
+    best = None
+    for _ in range(repeats):
+        s, state, _ = time_runner(runner, state, batches, warmup=warmup)
+        best = s if best is None else min(best, s)
+    return best
+
+
+def main_measured(steps: int = 3, warmup: int = 1, repeats: int = 2):
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from benchmarks.common import write_json
+    from repro.configs import get_config
+    from repro.core.schedule import uniform_ranges
+    from repro.data import DataConfig, make_batches
+    from repro.launch.runner import make_runner
+    from repro.models import model as M
+    from repro.optim import OptConfig
+
+    dc = DataConfig(global_batch=4, microbatches=4, seq_len=32)
+    oc = OptConfig()
+    mesh2 = Mesh(np.array(jax.devices()[:2]).reshape(2, 1),
+                 ("stage", "model"))
+
+    cfg10, cfg12 = _vit_heavy(), _vit_heavy(2)
+    arms = {
+        "uniform-pad": (cfg12, uniform_ranges(12, 4), 1.0),
+        "uniform": (cfg10, uniform_ranges(10, 4), 1.0),
+        # cost-balanced via partition() under the ViT stage-0 weighting
+        "balanced": (cfg10, None, VIT_FACTOR),
+    }
+    params = {c.name: M.init_params(jax.random.PRNGKey(0), c)
+              for c in (cfg10, cfg12)}
+    batches = list(make_batches(cfg10, dc, warmup + steps))
+
+    part_res = {}
+    for kind in KINDS:
+        part_res[kind] = {}
+        for tag, (cfg, part, vf) in arms.items():
+            r = make_runner("spmd", cfg, oc, dc, schedule=kind, pp=2,
+                            tp=1, mesh=mesh2, part=part, vit_factor=vf)
+            s = _time(r, params[cfg.name], batches, warmup, repeats)
+            part_res[kind][tag] = {
+                "s_per_step": round(s, 4), "n_layers": cfg.n_layers,
+                "part": [b - a for a, b in r.part]}
+            print(f"[table3] {kind:8s} {tag:12s} "
+                  f"part={part_res[kind][tag]['part']} {s:.3f} s/step",
+                  flush=True)
+        pr = part_res[kind]
+        pr["speedup_vs_uniform_pad"] = round(
+            pr["uniform-pad"]["s_per_step"] / pr["balanced"]["s_per_step"],
+            3)
+
+    # EP=2 vs EP=1 on the seeded MoE arch (pp=2 x ep=2 on 4 fake devices).
+    cfg_moe = get_config("olmoe-1b-7b").reduced(n_layers=2, d_model=64,
+                                                n_heads=4, vocab=128)
+    pm = M.init_params(jax.random.PRNGKey(1), cfg_moe)
+    bm = list(make_batches(cfg_moe, dc, warmup + steps))
+    ep_res = {"arch": cfg_moe.name, "num_experts": cfg_moe.moe.num_experts}
+    for ep, mesh in ((1, mesh2), (2, None)):
+        r = make_runner("spmd", cfg_moe, oc, dc, schedule="1f1b", pp=2,
+                        tp=1, ep=ep, mesh=mesh)
+        s = _time(r, pm, bm, warmup, repeats)
+        ep_res[f"ep{ep}_s_per_step"] = round(s, 4)
+        print(f"[table3] moe ep={ep} {s:.3f} s/step", flush=True)
+    ep_res["note"] = ("shared-core fake devices: ep=2 halves per-device "
+                      "expert FLOPs/weights but total work is constant, so "
+                      "parity (not speedup) is the expected wall-clock")
+
+    balanced_faster = all(
+        part_res[k]["balanced"]["s_per_step"]
+        < part_res[k]["uniform-pad"]["s_per_step"] for k in KINDS)
+    write_json("BENCH_table3", {
+        "setting": {
+            "devices": len(jax.devices()), "pp": 2,
+            "microbatches": dc.microbatches, "seq_len": dc.seq_len,
+            "steps": steps, "warmup": warmup, "repeats": repeats,
+            "vit_factor": VIT_FACTOR,
+            "caveat": ("one shared CPU core: wall-clock ranks total "
+                       "executed work; padding elimination is the "
+                       "measurable win, bubble-level uniform-vs-balanced "
+                       "gaps are simulator territory (--sim)")},
+        "partition": part_res,
+        "balanced_strictly_faster_than_uniform_pad": balanced_faster,
+        "expert_parallel": ep_res,
+    })
+    if not balanced_faster:
+        raise SystemExit("cost-balanced partition not faster than "
+                         "uniform-pad baseline")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sim", action="store_true",
+                    help="simulator-vs-paper CSV instead of measured mode")
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--repeats", type=int, default=2)
+    args = ap.parse_args()
+    if args.sim:
+        main_sim()
+    else:
+        main_measured(steps=args.steps, warmup=args.warmup,
+                      repeats=args.repeats)
 
 
 if __name__ == "__main__":

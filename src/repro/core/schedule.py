@@ -33,6 +33,152 @@ from repro.core.simulator import (Instr, Placement, PolicyState, StageTimes,
 SCHEDULES = ("gpipe", "1f1b", "1f1b-i", "zb-v", "stp", "stp-memeff")
 
 
+# ---------------------------------------------------------------------------
+# Layer-to-stage partitioning (contiguous ranges per virtual stage).
+# ---------------------------------------------------------------------------
+
+def layer_cost(spec, cfg) -> float:
+    """FLOPs-proportional per-layer cost estimate (matmul weight volume —
+    the 2*b*s factor is common to every layer and drops out of balancing).
+    Rough is fine: only ratios between layer kinds matter."""
+    d = cfg.d_model
+    c = 0.0
+    if spec.mixer == "attn":
+        hd = cfg.hd
+        c += d * (2 * cfg.n_heads * hd + 2 * cfg.kv_heads * hd)
+    elif spec.mixer in ("mamba", "mlstm", "slstm"):
+        c += 4 * d * d * cfg.ssm_expand
+    if spec.mlp == "gated":
+        c += 3 * d * cfg.d_ff
+    elif spec.mlp == "plain":
+        c += 2 * d * cfg.d_ff
+    elif spec.mlp == "moe" and cfg.moe is not None:
+        # active-expert FLOPs only (router + top_k expert FFNs per token).
+        gates = 3 if cfg.moe.gated else 2
+        c += cfg.moe.top_k * gates * d * cfg.moe.d_ff + d * cfg.moe.num_experts
+    return c
+
+
+def uniform_ranges(n: int, n_vs: int) -> tuple[tuple[int, int], ...]:
+    """Near-uniform contiguous split ignoring per-layer cost: base+1 layers
+    to the first ``n % n_vs`` stages (the paper's 'last stage has fewer
+    layers' guidance for the vocab-heavy loss stage).  This is the naive
+    baseline the cost-balanced :func:`partition` is measured against.
+
+    Degenerate ``n < n_vs`` yields empty tail stages (supported by the
+    reference executor only; the SPMD runtime rejects empty stages)."""
+    if n < 1 or n_vs < 1:
+        raise ValueError(f"cannot split {n} layers over {n_vs} stages")
+    base, rem = divmod(n, n_vs)
+    bounds, start = [], 0
+    for i in range(n_vs):
+        stop = start + base + (1 if i < rem else 0)
+        bounds.append((start, stop))
+        start = stop
+    return tuple(bounds)
+
+
+def partition(cfg, n_vs: int, *, ranges=None, vit_factor: float = 1.0,
+              costs=None) -> tuple[tuple[int, int], ...]:
+    """Map ``cfg.layers`` to contiguous per-virtual-stage ``(start, stop)``
+    ranges, one per virtual stage in dataflow order.
+
+    ``ranges``      — explicit user-given ranges (validated: contiguous,
+                      non-empty, covering all layers) take precedence.
+    ``vit_factor``  — multiplier on virtual stage 0's cost, modelling a VLM
+                      frontend (ViT encoder) resident on the first stage;
+                      mirrors ``StageTimes.scaled_vs(0, vit_factor)``.
+    ``costs``       — optional per-layer cost overrides (defaults to
+                      :func:`layer_cost` over ``cfg.layers``).
+
+    Cost-balanced mode minimises the bottleneck (max weighted stage cost)
+    exactly, then among bottleneck-optimal partitions minimises the sum of
+    squared stage costs (balance), preferring heavier *earlier* stages on
+    ties — so uniform costs reproduce the near-uniform split of
+    :func:`uniform_ranges` exactly.
+    """
+    n = cfg.n_layers
+    if ranges is not None:
+        ranges = tuple((int(a), int(b)) for a, b in ranges)
+        if len(ranges) != n_vs:
+            raise ValueError(f"need {n_vs} ranges, got {len(ranges)}")
+        pos = 0
+        for i, (a, b) in enumerate(ranges):
+            if a != pos or b < a:
+                raise ValueError(
+                    f"ranges must be contiguous from layer 0: "
+                    f"stage {i} got [{a},{b}) at position {pos}")
+            pos = b
+        if pos != n:
+            raise ValueError(f"ranges cover {pos} of {n} layers")
+        return ranges
+    if n < 1 or n_vs < 1:
+        raise ValueError(f"cannot split {n} layers over {n_vs} stages")
+    if n < n_vs:
+        # Degenerate tiny configs: one layer per early stage, empty tails
+        # (legacy near-uniform rule; cost-balancing has no freedom here).
+        return uniform_ranges(n, n_vs)
+    if costs is None:
+        costs = [layer_cost(spec, cfg) for spec in cfg.layers]
+    costs = [float(c) for c in costs]
+    if len(costs) != n:
+        raise ValueError(f"need {n} costs, got {len(costs)}")
+    if all(c == 0.0 for c in costs):
+        costs = [1.0] * n
+    weight = [vit_factor if s == 0 else 1.0 for s in range(n_vs)]
+    pre = [0.0]
+    for c in costs:
+        pre.append(pre[-1] + c)
+    seg = lambda a, b: pre[b] - pre[a]          # cost of layers [a, b)
+
+    # Pass 1 — exact bottleneck B*: dp[s][i] = min over partitions of
+    # layers[i:] into the last s stages of the max weighted stage cost.
+    INF = float("inf")
+    dp = [[INF] * (n + 1) for _ in range(n_vs + 1)]
+    dp[0][n] = 0.0
+    for s in range(1, n_vs + 1):
+        w = weight[n_vs - s]
+        for i in range(n - s, -1, -1):
+            best = INF
+            for j in range(i + 1, n - s + 2):
+                best = min(best, max(w * seg(i, j), dp[s - 1][j]))
+            dp[s][i] = best
+    bstar = dp[n_vs][0] * (1 + 1e-12)           # float-tolerant cap
+
+    # Pass 2 — among cap-feasible partitions minimise sum of squared
+    # weighted stage costs: sq[s][i] over the same suffix states.
+    sq = [[INF] * (n + 1) for _ in range(n_vs + 1)]
+    sq[0][n] = 0.0
+    for s in range(1, n_vs + 1):
+        w = weight[n_vs - s]
+        for i in range(n - s, -1, -1):
+            best = INF
+            for j in range(i + 1, n - s + 2):
+                c = w * seg(i, j)
+                if c <= bstar and sq[s - 1][j] < INF:
+                    best = min(best, c * c + sq[s - 1][j])
+            sq[s][i] = best
+
+    # Reconstruct forward, taking the *largest* first segment achieving the
+    # optimum at each step (earliest-heavy tie-break).
+    bounds, i = [], 0
+    for s in range(n_vs, 0, -1):
+        w = weight[n_vs - s]
+        cands = []
+        for j in range(i + 1, n - (s - 1) + 1):
+            c = w * seg(i, j)
+            if c <= bstar and sq[s - 1][j] < INF:
+                cands.append((c * c + sq[s - 1][j], j))
+        assert cands, "partition reconstruction failed"
+        best = min(t for t, _ in cands)
+        tol = 1e-9 * max(1.0, best)
+        j = max(j for t, j in cands if t <= best + tol)
+        bounds.append((i, j))
+        i = j
+    assert i == n
+    return tuple(bounds)
+
+
 def memory_bound(kind: str, p: int, m: int) -> float:
     """Per-device peak in-flight activation bound, in per-virtual-stage
     activation units (Table 1, +1 transient slack for the braided/1F1B F

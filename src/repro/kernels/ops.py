@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels.collective_matmul import (collective_matmul_allreduce,
                                              matmul_psum_step)
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ragged_dispatch import build_slot_map, ragged_dispatch_fwd
 from repro.kernels.rmsnorm import rmsnorm_fwd
 from repro.tp.context import TPContext
 
@@ -61,6 +62,23 @@ def collective_matmul(x, w, tp: TPContext,
     hops (``kernels.collective_matmul``)."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     return collective_matmul_allreduce(x, w, tp, interpret=interpret)
+
+
+def ragged_dispatch(x, idx, pos, keep, E: int, C: int,
+                    interpret: Optional[bool] = None):
+    """Capacity-bucketed MoE token dispatch x (b, s, d) -> (b, E, C, d)
+    through the ragged gather kernel (``kernels.ragged_dispatch``): the
+    routing decisions are inverted into a per-slot source map, then each
+    occupied capacity slot pulls exactly one token row.  Matches the dense
+    scatter-add (``ref.reference_ragged_dispatch``) bitwise, including
+    which tokens drop on capacity overflow."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+
+    def one(xr, ir, pr, kr):
+        src = build_slot_map(ir, pr, kr, E, C)
+        return ragged_dispatch_fwd(xr, src, E, C, interpret=interpret)
+
+    return jax.vmap(one)(x, idx, pos, keep)
 
 
 def matmul_accumulate(x, w, acc, interpret: Optional[bool] = None):

@@ -1,0 +1,78 @@
+"""Pallas TPU ragged-dispatch kernel for MoE token routing.
+
+The dense dispatch (``units._dispatch``) scatter-adds every (token, top-k)
+slot into the (E, C, d) capacity buffer — XLA lowers that to a full
+scatter over E*C*d even though at most ``min(s*k, E*C)`` rows are live.
+The ragged form inverts the routing on the slot side first: a slot map
+``src (E*C,) int32`` holds the flat token index that owns each capacity
+slot (-1 for empty slots — experts are *ragged*, each fills only as many
+slots as tokens routed to it).  The kernel is then a pure row gather with
+one DMA'd x-row per occupied slot, streamed block-by-block via scalar
+prefetch (the slot map is prefetched to SMEM so each grid step's BlockSpec
+can pick its source row dynamically), and empty slots write zeros without
+touching HBM bandwidth for x.
+
+Capacity-overflow determinism: the slot map is built from the same
+scan-order cumsum routing as the dense path, so which tokens drop (and
+therefore which slots stay empty) is bitwise identical to the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def build_slot_map(idx, pos, keep, E: int, C: int):
+    """Invert routing decisions to the slot side.
+
+    idx/pos (n, k) int32, keep (n, k) {0,1} for n flat tokens ->
+    src (E*C,) int32: the flat token index owning slot e*C+c, or -1 if the
+    slot is empty.  Kept slots are unique by construction (``pos`` is a
+    per-expert running count), so the scatter has no collisions.
+    """
+    n, k = idx.shape
+    flat_slot = (idx * C + pos).reshape(-1)
+    tok = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    kept = keep.reshape(-1) > 0
+    # dropped (token, k) slots scatter out of bounds and are discarded
+    target = jnp.where(kept, flat_slot, E * C)
+    return (jnp.full((E * C,), -1, jnp.int32)
+            .at[target].set(tok, mode="drop"))
+
+
+def _gather_kernel(src_ref, x_ref, o_ref):
+    i = pl.program_id(0)
+    valid = (src_ref[i] >= 0).astype(o_ref.dtype)
+    o_ref[...] = x_ref[...] * valid
+
+
+@functools.partial(jax.jit, static_argnames=("E", "C", "interpret"))
+def ragged_dispatch_fwd(x, src, E: int, C: int, interpret: bool = True):
+    """x (n, d), src (E*C,) -> expert_in (E, C, d).
+
+    Row r of the output is ``x[src[r]]`` for occupied slots and zeros for
+    empty ones.  The slot map rides the scalar-prefetch channel so the x
+    BlockSpec resolves its source row before the block DMA issues
+    (negative entries clamp to row 0 and are masked in-kernel).
+    """
+    n, d = x.shape
+    pad = (-d) % 128
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(E * C,),
+            in_specs=[pl.BlockSpec((1, d + pad),
+                                   lambda i, src: (jnp.maximum(src[i], 0), 0))],
+            out_specs=pl.BlockSpec((1, d + pad), lambda i, src: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((E * C, d + pad), x.dtype),
+        interpret=interpret,
+    )(src, x)
+    return out[:, :d].reshape(E, C, d)

@@ -32,3 +32,15 @@ def reference_matmul_psum_step(x, w, acc):
     return (jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
                     preferred_element_type=jnp.float32)
             + acc.astype(jnp.float32))
+
+
+def reference_ragged_dispatch(x, idx, pos, keep, E: int, C: int):
+    """Dense scatter-add oracle for the ragged-dispatch gather: x (n, d)
+    with routing idx/pos/keep (n, k) -> expert_in (E, C, d).  Dropped
+    slots (keep == 0) contribute nothing; kept slots are unique."""
+    n, d = x.shape
+    k = idx.shape[-1]
+    flat = (idx * C + pos).reshape(n * k)
+    upd = (x[:, None, :] * keep[..., None].astype(x.dtype)).reshape(n * k, d)
+    return (jnp.zeros((E * C, d), x.dtype).at[flat].add(upd)
+            .reshape(E, C, d))

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.schedule import build as build_schedule
+from repro.core.schedule import build as build_schedule, partition
 from repro.launch.hlo_analysis import analyze
 from repro.models import model as M
 from repro.optim import OptConfig
@@ -48,6 +48,9 @@ def main():
     ap.add_argument("--grads-only", action="store_true",
                     help="lower the grads-returning step instead of the "
                          "fused train step")
+    ap.add_argument("--vit-factor", type=float, default=1.0,
+                    help="cost multiplier on virtual stage 0 (VLM frontend) "
+                         "for the cost-balanced layer partition")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -55,12 +58,17 @@ def main():
     mesh = jax.make_mesh((args.data, args.pp, args.tp),
                          ("data", "stage", "model"))
     tables, pl = build_schedule(args.schedule, args.pp, args.microbatches)
-    assert cfg.n_layers % pl.n_vs == 0, \
-        f"{cfg.name}: n_layers {cfg.n_layers} % n_vs ({pl.n_vs}) != 0"
+    part = partition(cfg, pl.n_vs, vit_factor=args.vit_factor)
+    sizes = [b - a for a, b in part]
+    print(f"[partition] {cfg.n_layers} layers over {pl.n_vs} virtual "
+          f"stages: {'/'.join(map(str, sizes))}"
+          + (f" (vit_factor={args.vit_factor})"
+             if args.vit_factor != 1.0 else ""))
 
     def init_sds():
         p = M.init_params(jax.random.PRNGKey(0), cfg)
-        c0, c1, _ = stack_stage_params(p, cfg, args.pp, kind=pl.kind)
+        c0, c1, _ = stack_stage_params(p, cfg, args.pp, kind=pl.kind,
+                                       part=part)
         return c0, c1, p["embed"], p["head"]
 
     trees = jax.eval_shape(init_sds)
@@ -72,12 +80,12 @@ def main():
     t0 = time.time()
     if args.grads_only:
         step = build_pipeline_step(cfg, tables, pl, mesh, m, (b, s), trees,
-                                   model_axis="model")
+                                   model_axis="model", part=part)
         lower_args = (c0, c1, embed_p, head_p, tokens, labels)
     else:
         step = build_pipeline_train_step(
             cfg, tables, pl, mesh, m, (b, s), trees, OptConfig(),
-            model_axis="model")
+            model_axis="model", part=part)
         params = {"c0": c0, "c1": c1, "embed": embed_p, "head": head_p}
         zeros = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
@@ -94,6 +102,7 @@ def main():
         "arch": cfg.name, "schedule": args.schedule,
         "step": "grads" if args.grads_only else "fused_train",
         "mesh": f"data={args.data}xstage={args.pp}xmodel={args.tp}",
+        "partition": sizes,
         "chips": args.data * args.pp * args.tp,
         "microbatches": m, "compile_s": round(dt, 1),
         "peak_gb_per_chip": round(((getattr(mem, "argument_size_in_bytes",

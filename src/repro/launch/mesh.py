@@ -16,6 +16,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_pipeline_mesh(p: int, tp: int, data: int = 1):
-    """Mesh for the STP pipeline runtime: (data, stage, model)."""
+def make_pipeline_mesh(p: int, tp: int, data: int = 1, ep: int = 1):
+    """Mesh for the STP pipeline runtime: (data, stage[, expert], model).
+
+    The ``expert`` axis (MoE expert parallelism) is only materialised when
+    ``ep > 1`` so non-MoE callers keep the historical 3-axis mesh."""
+    if ep > 1:
+        return jax.make_mesh((data, p, ep, tp),
+                             ("data", "stage", "expert", "model"))
     return jax.make_mesh((data, p, tp), ("data", "stage", "model"))

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.schedule import build as build_schedule, memory_bound
+from repro.core.schedule import (build as build_schedule, memory_bound,
+                                 partition)
 from repro.core.simulator import verify_tables
 from repro.data import DataConfig, microbatches
 from repro.launch.state import Layout, TrainState, decay_mask
@@ -37,7 +38,7 @@ from repro.models.config import ModelConfig
 from repro.optim import OptConfig, adamw_update
 from repro.pipeline.reference import pipeline_grads
 from repro.pipeline.spmd import (build_pipeline_train_step, stack_stage_params,
-                                 stage_param_specs, stages_per_chunk)
+                                 stage_param_specs)
 
 
 class Runner(Protocol):
@@ -88,9 +89,11 @@ class ReferenceRunner:
     executor; canonical params, host AdamW."""
 
     def __init__(self, cfg: ModelConfig, oc: OptConfig, kind: str, p: int,
-                 m: int):
+                 m: int, *, part=None, vit_factor: float = 1.0):
         self.cfg, self.oc, self.m = cfg, oc, m
         self.tables, self.pl = build_schedule(kind, p, m)
+        self.part = partition(cfg, self.pl.n_vs, ranges=part,
+                              vit_factor=vit_factor)
         self.layout = Layout("canonical", cfg.n_layers)
         self.describe = f"{kind} p={p} m={m}"
 
@@ -100,7 +103,7 @@ class ReferenceRunner:
     def step(self, state, batch):
         mbs = microbatches(batch, self.m)
         loss, grads = pipeline_grads(state.params, mbs, self.tables,
-                                     self.pl, self.cfg)
+                                     self.pl, self.cfg, part=self.part)
         p2, o2, gn = adamw_update(state.params, grads, state.opt, self.oc)
         return TrainState(p2, o2, state.layout), {"loss": loss, "gnorm": gn}
 
@@ -115,40 +118,60 @@ class SpmdRunner:
     """
 
     def __init__(self, cfg: ModelConfig, oc: OptConfig, kind: str, p: int,
-                 m: int, mb_shape, *, tp: int = 1,
+                 m: int, mb_shape, *, tp: int = 1, ep: int = 1,
                  mesh: Optional[Mesh] = None, fuse_slots: bool = True,
-                 braid_tp: bool = False):
+                 braid_tp: bool = False, part=None, vit_factor: float = 1.0):
         self.cfg, self.oc, self.m = cfg, oc, m
+        if ep > 1:
+            if cfg.moe is None:
+                raise ValueError(f"ep={ep} needs a MoE config")
+            if cfg.moe.num_experts % ep:
+                raise ValueError(
+                    f"ep={ep} must divide num_experts={cfg.moe.num_experts}")
         if mesh is None:
             ndev = len(jax.devices())
-            if p * tp != ndev:
+            if p * ep * tp != ndev:
                 raise ValueError(
-                    f"spmd runtime needs pp*tp == device count (pp={p}, "
-                    f"tp={tp}, devices={ndev}); set XLA_FLAGS="
+                    f"spmd runtime needs pp*ep*tp == device count (pp={p}, "
+                    f"ep={ep}, tp={tp}, devices={ndev}); set XLA_FLAGS="
                     f"--xla_force_host_platform_device_count=N")
-            mesh = Mesh(np.array(jax.devices()).reshape(p, tp),
-                        ("stage", "model"))
+            if ep > 1:
+                mesh = Mesh(np.array(jax.devices()).reshape(p, ep, tp),
+                            ("stage", "expert", "model"))
+            else:
+                mesh = Mesh(np.array(jax.devices()).reshape(p, tp),
+                            ("stage", "model"))
         self.mesh = mesh
         tables, pl = build_schedule(kind, p, m)
         verify_tables(tables, pl, m, mem_bound=memory_bound(kind, p, m))
         self.pl = pl
+        bounds = partition(cfg, pl.n_vs, ranges=part, vit_factor=vit_factor)
+        self.part = bounds
         self.layout = Layout("stage", cfg.n_layers, p=p,
-                             lvs=stages_per_chunk(cfg, p, pl.kind),
-                             placement=pl.kind)
-        self.describe = (f"spmd {kind} {pl.kind} p={p} tp={tp} m={m}"
-                         + (" braid" if braid_tp else ""))
+                             placement=pl.kind, bounds=bounds)
+        sizes = [b - a for a, b in bounds]
+        ptag = ("" if len(set(sizes)) == 1
+                else " part=" + "/".join(map(str, sizes)))
+        self.describe = (f"spmd {kind} {pl.kind} p={p}"
+                         + (f" ep={ep}" if ep > 1 else "")
+                         + f" tp={tp} m={m}"
+                         + (" braid" if braid_tp else "") + ptag)
         model_axis = "model" if tp > 1 else None
+        expert_axis = "expert" if ep > 1 else None
 
         def sds(key):
             prm = M.init_params(key, cfg)
-            c0, c1, _ = stack_stage_params(prm, cfg, p, kind=pl.kind)
+            c0, c1, _ = stack_stage_params(prm, cfg, p, kind=pl.kind,
+                                           part=bounds)
             return c0, c1, prm["embed"], prm["head"]
 
         trees = jax.eval_shape(sds, jax.ShapeDtypeStruct((2,), jnp.uint32))
         self._step = build_pipeline_train_step(
             cfg, tables, pl, mesh, m, mb_shape, trees, oc,
-            model_axis=model_axis, fuse_slots=fuse_slots, braid_tp=braid_tp)
-        pspec = stage_param_specs(trees, model_axis=model_axis)
+            model_axis=model_axis, expert_axis=expert_axis,
+            fuse_slots=fuse_slots, braid_tp=braid_tp, part=bounds)
+        pspec = stage_param_specs(trees, model_axis=model_axis,
+                                  expert_axis=expert_axis)
         self._shardings = {
             "params": jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
             "opt": {"mu": jax.tree.map(lambda s: NamedSharding(mesh, s),
@@ -180,8 +203,9 @@ class SpmdRunner:
 
 def make_runner(runtime: str, cfg: ModelConfig, oc: OptConfig,
                 dc: DataConfig, *, schedule: str = "stp", pp: int = 2,
-                tp: int = 1, mesh: Optional[Mesh] = None,
-                fuse_slots: bool = True, braid_tp: bool = False) -> Runner:
+                tp: int = 1, ep: int = 1, mesh: Optional[Mesh] = None,
+                fuse_slots: bool = True, braid_tp: bool = False,
+                part=None, vit_factor: float = 1.0) -> Runner:
     """Factory over the three runtimes ('pjit' | 'pipeline' | 'spmd').
 
     ``fuse_slots`` (spmd only) selects the segment-fused slot lowering
@@ -189,14 +213,23 @@ def make_runner(runtime: str, cfg: ModelConfig, oc: OptConfig,
     the generic one-switch-per-slot scan, e.g. for differential debugging.
     ``braid_tp`` (spmd only) lowers composite F&B slots through the
     braided overlap-aware chunk executor.
+    ``part`` / ``vit_factor`` (pipeline + spmd) choose the per-virtual-stage
+    layer partition: explicit ranges, or cost-balanced via
+    ``core.schedule.partition`` with stage 0's cost scaled by
+    ``vit_factor`` (VLM frontend).
+    ``ep`` (spmd only) shards MoE experts over an ``expert`` mesh axis
+    between ``stage`` and ``model``; routing stays replicated, so training
+    matches ``ep=1`` exactly.
     """
     if runtime == "pjit":
         return PjitRunner(cfg, oc)
     if runtime == "spmd":
         mb = dc.global_batch // dc.microbatches
         return SpmdRunner(cfg, oc, schedule, pp, dc.microbatches,
-                          (mb, dc.seq_len), tp=tp, mesh=mesh,
-                          fuse_slots=fuse_slots, braid_tp=braid_tp)
+                          (mb, dc.seq_len), tp=tp, ep=ep, mesh=mesh,
+                          fuse_slots=fuse_slots, braid_tp=braid_tp,
+                          part=part, vit_factor=vit_factor)
     if runtime == "pipeline":
-        return ReferenceRunner(cfg, oc, schedule, pp, dc.microbatches)
+        return ReferenceRunner(cfg, oc, schedule, pp, dc.microbatches,
+                               part=part, vit_factor=vit_factor)
     raise ValueError(f"unknown runtime {runtime!r}")

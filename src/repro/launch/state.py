@@ -38,6 +38,14 @@ class Layout:
     p: int = 1                     # stage layout: pipeline depth
     lvs: int = 1                   # stage layout: layers per virtual stage
     placement: str = "vshape"      # stage layout: flat | parallel | vshape
+    # stage layout: optional per-virtual-stage ((start, stop), ...) layer
+    # ranges for heterogeneous partitions; None means the uniform ``lvs``.
+    bounds: Optional[tuple] = None
+
+    @property
+    def part(self):
+        """The partition argument ``stack/unstack_stages`` expects."""
+        return self.lvs if self.bounds is None else self.bounds
 
 
 def _stack_tree(tree, layout: Layout):
@@ -48,7 +56,7 @@ def _stack_tree(tree, layout: Layout):
         return {"embed": tree["embed"],
                 "blocks": M.stack_blocks(tree["blocks"], layout.period),
                 "head": tree["head"]}
-    c0, c1 = stack_stages(tree["blocks"], layout.p, layout.lvs,
+    c0, c1 = stack_stages(tree["blocks"], layout.p, layout.part,
                           layout.placement)
     return {"c0": c0, "c1": c1, "embed": tree["embed"],
             "head": tree["head"]}
@@ -64,7 +72,7 @@ def _unstack_tree(tree, layout: Layout):
                 "blocks": M.unstack_blocks(tree["blocks"], layout.period),
                 "head": tree["head"]}
     blocks = unstack_stages(tree["c0"], tree["c1"], layout.n_layers,
-                            layout.p, layout.lvs, layout.placement)
+                            layout.p, layout.part, layout.placement)
     return {"embed": tree["embed"], "blocks": blocks, "head": tree["head"]}
 
 

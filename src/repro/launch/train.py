@@ -59,6 +59,15 @@ def main():
     ap.add_argument("--pp", type=int, default=2)
     ap.add_argument("--tp", type=int, default=1,
                     help="model-axis size for the spmd runtime")
+    ap.add_argument("--ep", type=int, default=1,
+                    help="expert-axis size for the spmd runtime (MoE "
+                         "archs; needs pp*ep*tp devices)")
+    ap.add_argument("--part", default=None,
+                    help="explicit per-virtual-stage layer counts, e.g. "
+                         "'1,3,3,3' (default: cost-balanced partition)")
+    ap.add_argument("--vit-factor", type=float, default=1.0,
+                    help="cost multiplier on virtual stage 0 for the "
+                         "cost-balanced partition (VLM frontend)")
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=5)
@@ -76,8 +85,18 @@ def main():
     dc = DataConfig(seq_len=args.seq, global_batch=args.batch,
                     microbatches=args.microbatches)
 
+    part = None
+    if args.part:
+        sizes = [int(x) for x in args.part.split(",")]
+        bounds, start_l = [], 0
+        for n in sizes:
+            bounds.append((start_l, start_l + n))
+            start_l += n
+        part = tuple(bounds)
     runner = make_runner(args.runtime, cfg, oc, dc, schedule=args.schedule,
-                         pp=args.pp, tp=args.tp, braid_tp=args.braid_tp)
+                         pp=args.pp, tp=args.tp, ep=args.ep,
+                         braid_tp=args.braid_tp, part=part,
+                         vit_factor=args.vit_factor)
     start = 0
     if args.ckpt and Path(args.ckpt, "meta.json").exists():
         params, opt, start, _ = load_canonical(args.ckpt, cfg)

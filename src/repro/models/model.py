@@ -203,15 +203,23 @@ def _braid_finish(v):
 
 
 def chunk_fwd_bwd_braided(f_layer_params, x, b_layer_params, b_ctxs, gy,
-                          tp: TPContext, rope, specs, cfg: ModelConfig):
+                          tp: TPContext, rope, specs, cfg: ModelConfig,
+                          b_specs=None):
     """Interleave a forward chunk with a backward-act chunk at unit
     granularity so each side's TP collective hides under the partner's
     matmuls (paper §4, Fig. 1).
 
+    ``b_specs`` names the backward chunk's layer specs when the two chunks
+    cover different stage ranges (heterogeneous partitions); it defaults to
+    ``specs`` (both chunks the same shape).  The braid loop itself already
+    tolerates unequal unit counts — the longer side simply runs its tail
+    un-partnered.
+
     Numerically equivalent to
 
         y, f_ctxs = chunk_fwd(f_layer_params, tp, x, rope, specs, cfg)
-        gx, wts, js = chunk_bwd_act(b_layer_params, tp, b_ctxs, gy, specs, cfg)
+        gx, wts, js = chunk_bwd_act(b_layer_params, tp, b_ctxs, gy,
+                                    b_specs or specs, cfg)
 
     (bitwise at ``tp.size <= 2``; ring reassociation beyond that) and
     returns ``(y, f_ctxs, gx, wts, js)``.
@@ -239,8 +247,10 @@ def chunk_fwd_bwd_braided(f_layer_params, x, b_layer_params, b_ctxs, gy,
     ring's consumer.
     """
     otp = OverlapTP(tp)
+    if b_specs is None:
+        b_specs = specs
     f_steps = _braid_f_steps(f_layer_params, specs, otp, rope, cfg)
-    b_steps = _braid_b_steps(b_layer_params, b_ctxs, specs, otp, cfg)
+    b_steps = _braid_b_steps(b_layer_params, b_ctxs, b_specs, otp, cfg)
 
     f_pieces, b_pieces = [], []
     pend_f = None
@@ -285,7 +295,7 @@ def chunk_fwd_bwd_braided(f_layer_params, x, b_layer_params, b_ctxs, gy,
     # Reassemble chunk_bwd_act's per-layer wtape/joint dicts (reversed-order
     # pieces → layer order, mirroring layer_bwd_act's key structure).
     wtapes, joints, it = [], [], iter(b_pieces)
-    for spec in reversed(specs):
+    for spec in reversed(b_specs):
         wtape, joint = {}, {}
         if spec.mlp != "none":
             wt_mlp, j_mlp, j_ln2 = next(it)

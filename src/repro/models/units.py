@@ -256,6 +256,27 @@ def _gates_core(logits, idx):
     return jax.nn.softmax(sel.astype(jnp.float32), axis=-1).astype(logits.dtype)
 
 
+_RAGGED_DISPATCH = {"on": False}
+
+
+def set_ragged_dispatch(enabled: bool) -> None:
+    """Route the forward token dispatch through the Pallas ragged-dispatch
+    kernel (``kernels.ragged_dispatch``) instead of the XLA scatter-add.
+
+    Forward-only: the backward re-dispatch of per-slot grads relies on
+    add-semantics for capacity-clamped (zero-valued) dropped slots, which
+    the one-owner-per-slot gather does not model."""
+    _RAGGED_DISPATCH["on"] = bool(enabled)
+
+
+def _dispatch_tokens(x, idx, pos, keep, E, C):
+    """Forward token dispatch: kernel gather when enabled, else dense."""
+    if _RAGGED_DISPATCH["on"]:
+        from repro.kernels import ops as kops
+        return kops.ragged_dispatch(x, idx, pos, keep, E, C)
+    return _dispatch(x, idx, pos, keep, E, C)
+
+
 def _dispatch(x, idx, pos, keep, E, C):
     """x (b, s, d) -> expert_in (b, E, C, d) via scatter-add."""
     b, s, d = x.shape
@@ -292,8 +313,12 @@ def moe_fwd(params, tp: TPContext, x_ln, x_res, spec: LayerSpec,
     gates, gates_saved = ag.core_vjp(lambda _, lg: _gates_core(lg, idx),
                                      None, logits)
     expert_in = _constrain_moe(
-        _dispatch(x_ln, idx, pos, keep, moe.num_experts, C), 1)
-    ein = expert_in
+        _dispatch_tokens(x_ln, idx, pos, keep, moe.num_experts, C), 1)
+    # Expert parallelism: routing + dispatch above are replicated across the
+    # expert axis (drops bitwise-identical to EP=1); each rank runs the FFN
+    # on its contiguous E/ep expert slice against its local weight shards,
+    # then the combine input is rebuilt by an expert-dim all-gather.
+    ein = tp.ep_slice(expert_in, 1)
     if moe.gated:
         hg = jnp.einsum("becd,edf->becf", ein, params["wg"])
         hu = jnp.einsum("becd,edf->becf", ein, params["wu"])
@@ -304,10 +329,10 @@ def moe_fwd(params, tp: TPContext, x_ln, x_res, spec: LayerSpec,
         core = lambda _, h_: jax.nn.gelu(h_)
         a, core_saved = ag.core_vjp(core, None, h1)
     part = jnp.einsum("becf,efd->becd", a, params["wd"])
-    expert_out = _constrain_moe(tp.psum(part), 1)
+    expert_out = _constrain_moe(tp.ep_all_gather(tp.psum(part), 1), 1)
     y_moe, picked = _gather_combine(expert_out, idx, pos, keep, gates)
     y = y_moe + x_res
-    ctx = (x_ln, gates_saved, (idx, pos, keep, gates), expert_in, core_saved,
+    ctx = (x_ln, gates_saved, (idx, pos, keep, gates), ein, core_saved,
            a, expert_out)
     return y, ctx
 
@@ -330,21 +355,26 @@ def moe_bwd_act(params, tp: TPContext, ctx, gy, spec: LayerSpec,
                              idx.reshape(b, -1, 1), pos.reshape(b, -1, 1),
                              jnp.ones_like(keep).reshape(b, -1, 1), E, C)
     g_expert_out = g_expert_out.reshape(b, E, C, d)
-    # expert MLP bwd
+    # expert MLP bwd on this rank's expert slice (weight tapes stay local —
+    # their grads shard exactly like the expert weight shards); the token
+    # grad is rebuilt full by the expert-dim all-gather mirroring forward.
+    g_eo = tp.ep_slice(g_expert_out, 1)
     if moe.gated:
-        g_a = jnp.einsum("becd,efd->becf", g_expert_out, params["wd"])
+        g_a = jnp.einsum("becd,efd->becf", g_eo, params["wd"])
         core = lambda _, g_, u_: jax.nn.silu(g_) * u_
         _, (g_hg, g_hu) = ag.core_bwd(core, core_saved, g_a)
-        g_ein = tp.psum(jnp.einsum("becf,edf->becd", g_hg, params["wg"])
-                        + jnp.einsum("becf,edf->becd", g_hu, params["wu"]))
+        g_ein = tp.ep_all_gather(
+            tp.psum(jnp.einsum("becf,edf->becd", g_hg, params["wg"])
+                    + jnp.einsum("becf,edf->becd", g_hu, params["wu"])), 1)
         wtape = {"wg": (expert_in, g_hg), "wu": (expert_in, g_hu),
-                 "wd": (a, g_expert_out)}
+                 "wd": (a, g_eo)}
     else:
-        g_a = jnp.einsum("becd,efd->becf", g_expert_out, params["wd"])
+        g_a = jnp.einsum("becd,efd->becf", g_eo, params["wd"])
         core = lambda _, h_: jax.nn.gelu(h_)
         _, (g_h1,) = ag.core_bwd(core, core_saved, g_a)
-        g_ein = tp.psum(jnp.einsum("becf,edf->becd", g_h1, params["wg"]))
-        wtape = {"wg": (expert_in, g_h1), "wd": (a, g_expert_out)}
+        g_ein = tp.ep_all_gather(
+            tp.psum(jnp.einsum("becf,edf->becd", g_h1, params["wg"])), 1)
+        wtape = {"wg": (expert_in, g_h1), "wd": (a, g_eo)}
     # dispatch bwd: gather g_ein back to tokens
     k = idx.shape[-1]
     flat = (idx * C + pos).reshape(b, s * k)

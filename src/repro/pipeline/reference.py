@@ -18,25 +18,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.schedule import partition
 from repro.core.simulator import Instr, Placement
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.tp.context import TPContext
-
-
-def split_chunks(cfg: ModelConfig, n_vs: int):
-    """Layer index ranges per virtual stage (contiguous, near-uniform; the
-    remainder goes to the earliest stages, mirroring the paper's 'last stage
-    has two fewer layers' guidance for the vocab-heavy loss stage)."""
-    n = cfg.n_layers
-    base, rem = divmod(n, n_vs)
-    sizes = [base + (1 if i < rem else 0) for i in range(n_vs)]
-    bounds = []
-    start = 0
-    for s in sizes:
-        bounds.append((start, start + s))
-        start += s
-    return bounds
 
 
 def _merge_grads(acc, new, scale=1.0):
@@ -54,16 +40,19 @@ def _merge_grads(acc, new, scale=1.0):
 
 
 def pipeline_grads(params, batches, tables, pl: Placement, cfg: ModelConfig,
-                   tp: TPContext = TPContext()):
+                   tp: TPContext = TPContext(), part=None):
     """Execute a schedule table over ``m`` microbatches.
 
     params: canonical init_params output (unstacked blocks).
     batches: list of m microbatch dicts ({"tokens"/"embeds", "labels"}).
+    part: per-virtual-stage (start, stop) layer ranges — defaults to the
+    shared ``core.schedule.partition`` so this executor and the SPMD runtime
+    agree on stage contents by construction.
     Returns (mean loss, grads pytree like params).
     """
     m = len(batches)
     n_vs = pl.n_vs
-    bounds = split_chunks(cfg, n_vs)
+    bounds = partition(cfg, n_vs) if part is None else list(part)
     vs_params = [params["blocks"][a:b] for a, b in bounds]
     vs_specs = [cfg.layers[a:b] for a, b in bounds]
     scale = 1.0 / m

@@ -20,9 +20,14 @@ slots.  Per slot each device
 
 All six schedule kinds in ``repro.core.schedule.SCHEDULES`` lower through
 this one runtime: table -> verified instruction IR -> slot grid -> scanned
-shard_map program.  Uniform layer stacks are required
-(``n_layers % (v * p) == 0``); TP optionally composes via a ``model`` mesh
-axis.  Heterogeneous architectures run through ``pipeline.reference``.
+shard_map program.  Stages may hold *different* layer counts: the shared
+``core.schedule.partition`` maps layers to contiguous per-virtual-stage
+ranges (explicit or cost-balanced), stacks are zero-padded per chunk to the
+chunk's deepest stage, and devices whose (chunk0, chunk1) ranges differ
+dispatch through distinct switch arms keyed by their partition *signature*
+— each arm loops over its own static layer count, so pad rows are never
+computed on and their grads/updates stay exactly zero.  TP optionally
+composes via a ``model`` mesh axis.
 
 Two entry points share the program body: ``build_pipeline_step`` returns
 gradients to the host (differential tests), while
@@ -42,6 +47,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.schedule import partition
 from repro.core.simulator import Placement, flat, parallel, vshape
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -53,17 +59,46 @@ _PLACEMENTS = {"flat": flat, "parallel": parallel, "vshape": vshape}
 
 
 def stages_per_chunk(cfg: ModelConfig, p: int, kind: str = "vshape") -> int:
-    """Layers per virtual stage (the placement carries the chunk count)."""
+    """Layers per virtual stage of a *uniform* stack (legacy helper; the
+    executor itself is partition-generic — see ``core.schedule.partition``)."""
     n_vs = _PLACEMENTS[kind](p).n_vs
     n = cfg.n_layers
     assert n % n_vs == 0, \
-        f"SPMD executor needs n_layers % n_vs == 0 (n={n}, n_vs={n_vs})"
+        f"uniform stacks need n_layers % n_vs == 0 (n={n}, n_vs={n_vs})"
     return n // n_vs
 
 
-def stack_stages(blocks, p: int, lvs: int, kind: str = "vshape"):
+def _part_bounds(part, p: int, kind: str) -> tuple[tuple[int, int], ...]:
+    """Normalize a partition argument: an int is the legacy uniform
+    layers-per-virtual-stage count; anything else is a per-virtual-stage
+    (start, stop) range sequence (as produced by ``core.schedule.partition``)."""
+    if isinstance(part, (int, np.integer)):
+        n_vs = _PLACEMENTS[kind](p).n_vs
+        return tuple((i * part, (i + 1) * part) for i in range(n_vs))
+    bounds = tuple((int(a), int(b)) for a, b in part)
+    for i, (a, b) in enumerate(bounds):
+        if b <= a:
+            raise ValueError(
+                f"SPMD executor requires a non-empty layer range per "
+                f"virtual stage; stage {i} got [{a},{b})")
+    return bounds
+
+
+def default_part(cfg: ModelConfig, p: int, kind: str = "vshape"
+                 ) -> tuple[tuple[int, int], ...]:
+    """Cost-balanced per-virtual-stage layer ranges for (cfg, placement)."""
+    return partition(cfg, _PLACEMENTS[kind](p).n_vs)
+
+
+def stack_stages(blocks, p: int, part, kind: str = "vshape"):
     """Per-layer pytree list -> (chunk0, chunk1) stacked with leading
-    (p, L_vs) dims.  Stacking is in *device* order per chunk:
+    (p, Lmax_chunk) dims, where ``part`` gives each virtual stage's
+    contiguous (start, stop) layer range (a bare int means the legacy
+    uniform layers-per-stage stack).  Stages holding fewer layers than the
+    chunk's deepest stage are zero-padded at the tail; pad rows are never
+    computed on and their grads/optimizer updates stay exactly zero.
+
+    Stacking is in *device* order per chunk:
 
       flat      chunk0 vs s = device s; chunk1 empty ({}).
       parallel  chunk0 vs s = device s; chunk1 vs p+s = device s.
@@ -72,48 +107,59 @@ def stack_stages(blocks, p: int, lvs: int, kind: str = "vshape"):
 
     Works on any canonical per-layer list (params, AdamW moments, grads).
     """
+    bounds = _part_bounds(part, p, kind)
+    pl = _PLACEMENTS[kind](p)
+
     def stack(layers):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
 
-    def chunk_of(vs_of_dev):
-        return stack([stack(blocks[vs_of_dev(s) * lvs:
-                                   (vs_of_dev(s) + 1) * lvs])
-                      for s in range(p)])
+    def chunk_of(c):
+        rngs = [bounds[pl.vs_of(s, c)] for s in range(p)]
+        lmax = max(b - a for a, b in rngs)
+        rows = []
+        for a, b in rngs:
+            layers = list(blocks[a:b])
+            pad = jax.tree.map(jnp.zeros_like, layers[-1])
+            rows.append(stack(layers + [pad] * (lmax - (b - a))))
+        return stack(rows)
 
-    c0 = chunk_of(lambda s: s)
+    c0 = chunk_of(0)
     if kind == "flat":
         return c0, {}
-    if kind == "parallel":
-        return c0, chunk_of(lambda s: p + s)
-    return c0, chunk_of(lambda s: 2 * p - 1 - s)
+    return c0, chunk_of(1)
 
 
-def unstack_stages(c0, c1, n_layers: int, p: int, lvs: int,
+def unstack_stages(c0, c1, n_layers: int, p: int, part,
                    kind: str = "vshape"):
-    """Inverse of ``stack_stages``: back to the per-layer pytree list."""
+    """Inverse of ``stack_stages``: back to the per-layer pytree list
+    (padding rows dropped)."""
+    bounds = _part_bounds(part, p, kind)
+    pl = _PLACEMENTS[kind](p)
     blocks = [None] * n_layers
+    chunks = [(0, c0)] + ([] if kind == "flat" else [(1, c1)])
     for s in range(p):
-        for i in range(lvs):
-            blocks[s * lvs + i] = jax.tree.map(lambda x: x[s, i], c0)
-            if kind == "flat":
-                continue
-            vs1 = (p + s) if kind == "parallel" else (2 * p - 1 - s)
-            blocks[vs1 * lvs + i] = jax.tree.map(lambda x: x[s, i], c1)
+        for c, arr in chunks:
+            a, b = bounds[pl.vs_of(s, c)]
+            for i in range(b - a):
+                blocks[a + i] = jax.tree.map(lambda x: x[s, i], arr)
     return blocks
 
 
 def stack_stage_params(params, cfg: ModelConfig, p: int,
-                       kind: str = "vshape"):
-    """Canonical params -> (chunk0, chunk1, L_vs); see ``stack_stages``."""
-    lvs = stages_per_chunk(cfg, p, kind)
-    c0, c1 = stack_stages(params["blocks"], p, lvs, kind)
-    return c0, c1, lvs
+                       kind: str = "vshape", part=None):
+    """Canonical params -> (chunk0, chunk1, part); see ``stack_stages``.
+    ``part`` defaults to the shared cost-balanced partition; the returned
+    value is what ``unstack_stage_grads`` expects back."""
+    bounds = (default_part(cfg, p, kind) if part is None
+              else _part_bounds(part, p, kind))
+    c0, c1 = stack_stages(params["blocks"], p, bounds, kind)
+    return c0, c1, bounds
 
 
-def unstack_stage_grads(g0, g1, cfg: ModelConfig, p: int, lvs: int,
+def unstack_stage_grads(g0, g1, cfg: ModelConfig, p: int, part,
                         kind: str = "vshape"):
     """Inverse of ``stack_stage_params`` for the gradient pytrees."""
-    return unstack_stages(g0, g1, cfg.n_layers, p, lvs, kind)
+    return unstack_stages(g0, g1, cfg.n_layers, p, part, kind)
 
 
 def _zeros_like_tree(tree):
@@ -147,11 +193,21 @@ def _tp_axis_of(name: str, base_ndim: int):
     return None
 
 
+def _ep_axis_of(name: str, base_ndim: int):
+    """Expert-parallel shard axis for a named param, or None.  MoE expert
+    weights (E, d, f) / (E, f, d) shard their leading expert dim; the dense
+    MLP reuses the same names at base rank 2 and stays unsharded."""
+    if name in ("wg", "wu", "wd") and base_ndim >= 3:
+        return -3
+    return None
+
+
 def tp_specs(tree, model_axis: Optional[str], stage_axis: Optional[str],
-             lead: int = 0):
+             lead: int = 0, expert_axis: Optional[str] = None):
     """PartitionSpec tree for a params pytree.  ``lead`` extra leading dims
     (stage stack + per-vs layer stack) precede the parameter's own dims; if
-    ``stage_axis`` is given it names the first of them."""
+    ``stage_axis`` is given it names the first of them.  ``expert_axis``
+    additionally shards MoE expert weights over their E dim."""
     def one(path, leaf):
         name = None
         for k in reversed(path):
@@ -164,6 +220,9 @@ def tp_specs(tree, model_axis: Optional[str], stage_axis: Optional[str],
         ax = _tp_axis_of(name, leaf.ndim - lead) if model_axis else None
         if ax is not None:
             spec[leaf.ndim + ax] = model_axis
+        eax = (_ep_axis_of(name, leaf.ndim - lead) if expert_axis else None)
+        if eax is not None:
+            spec[leaf.ndim + eax] = expert_axis
         return P(*spec)
     return jax.tree_util.tree_map_with_path(one, tree)
 
@@ -179,9 +238,9 @@ def _write(buf, mb, val):
             a, v.astype(a.dtype), mb, 0), buf, val)
 
 
-def _local_sds(tree, tp_size: int, lead: int, strip: int):
+def _local_sds(tree, tp_size: int, lead: int, strip: int, ep_size: int = 1):
     """ShapeDtypeStructs of the per-device shards: drop ``strip`` leading
-    (stage) dims and divide TP-ruled axes by ``tp_size``."""
+    (stage) dims and divide TP-ruled (and EP-ruled) axes by the axis size."""
     def one(path, leaf):
         name = None
         for k in reversed(path):
@@ -192,6 +251,9 @@ def _local_sds(tree, tp_size: int, lead: int, strip: int):
         ax = _tp_axis_of(name, leaf.ndim - lead)
         if ax is not None and tp_size > 1:
             shape[ax] = shape[ax] // tp_size
+        eax = _ep_axis_of(name, leaf.ndim - lead)
+        if eax is not None and ep_size > 1:
+            shape[eax] = shape[eax] // ep_size
         return jax.ShapeDtypeStruct(tuple(shape), leaf.dtype)
     return jax.tree_util.tree_map_with_path(one, tree)
 
@@ -200,8 +262,9 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                       m: int, mb_shape, param_trees, *,
                       stage_axis: str = "stage",
                       model_axis: Optional[str] = None,
+                      expert_axis: Optional[str] = None,
                       fuse: bool = True, ablate: Optional[str] = None,
-                      braid_tp: bool = False):
+                      braid_tp: bool = False, part=None):
     """Build the per-device slot program ``run(c0, c1, embed_p, head_p,
     tokens, labels) -> (loss, g0, g1, g_embed, g_head)`` to be wrapped in
     ``shard_map`` — shared by the grads-only step and the fused train step.
@@ -237,6 +300,14 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     executor (``model.chunk_fwd_bwd_braided``): unit-interleaved partner
     chunks with ring-decomposed output collectives, instead of the
     sequential chunk_f-then-chunk_b composition.
+
+    ``part`` gives the per-virtual-stage contiguous layer ranges (default:
+    cost-balanced ``core.schedule.partition``).  Devices are grouped into
+    partition *signatures* — the (chunk0 range, chunk1 range) pair — and
+    every dispatch arm is specialised per signature: the arm's chunk loops
+    run its own static layer counts, so one traced program serves stages of
+    different depths (uniform partitions collapse to a single signature and
+    trace exactly the old program).
     """
     assert ablate in (None, "exchange", "compute", "both", "tp")
     do_exchange = ablate not in ("exchange", "both")
@@ -254,39 +325,38 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     # some stage rows take; ppermute would deadlock there (XLA:CPU
     # rendezvouses collective-permute globally), so hops lower as per-group
     # one-hot psums instead.
+    ep_size = mesh.shape[expert_axis] if expert_axis else 1
     tp = TPContext(axis=model_axis,
                    size=(mesh.shape[model_axis] if model_axis else 1),
-                   safe_ring=True)
+                   safe_ring=True,
+                   expert_axis=expert_axis, expert_size=ep_size)
     # ablate="tp": execute with an identity context (no model-axis
     # collectives) while `tp` keeps the real size for shard shapes.
     tp_exec = TPContext() if ablate == "tp" else tp
-    lvs = stages_per_chunk(cfg, p, pl.kind)
-    specs0 = cfg.layers[:lvs]                           # uniform stacks
+
+    # --- partition signatures -------------------------------------------
+    bounds = (default_part(cfg, p, pl.kind) if part is None
+              else _part_bounds(part, p, pl.kind))
+    rng = {0: [bounds[pl.vs_of(d, 0)] for d in range(p)]}
+    if two_chunks:
+        rng[1] = [bounds[pl.vs_of(d, 1)] for d in range(p)]
+    chunk_ids = sorted(rng)
+    sig_of_dev = [tuple(rng[c][d] for c in chunk_ids) for d in range(p)]
+    sigs = list(dict.fromkeys(sig_of_dev))
+    sig_id = np.array([sigs.index(s) for s in sig_of_dev], np.int32)
+    lmax = {c: max(b - a for a, b in rng[c]) for c in chunk_ids}
+
     bmb, seq = mb_shape
     d_model = cfg.d_model
     scale = 1.0 / m
     rope = M._rope_for(cfg, seq)
 
-    def chunk_f(cparams, x, tpc=tp_exec):
-        layers = [jax.tree.map(lambda a: a[i], cparams)
-                  for i in range(lvs)]
-        return M.chunk_fwd(layers, tpc, x, rope, specs0, cfg)
+    def specs_of(r):
+        return cfg.layers[r[0]:r[1]]
 
-    def chunk_b(cparams, ctxs, gy, tpc=tp_exec):
-        layers = [jax.tree.map(lambda a: a[i], cparams)
-                  for i in range(lvs)]
-        return M.chunk_bwd_act(layers, tpc, ctxs, gy, specs0, cfg)
-
-    def chunk_fb(f_cparams, x, b_cparams, ctxs, gy):
-        f_layers = [jax.tree.map(lambda a: a[i], f_cparams)
-                    for i in range(lvs)]
-        b_layers = [jax.tree.map(lambda a: a[i], b_cparams)
-                    for i in range(lvs)]
-        return M.chunk_fwd_bwd_braided(f_layers, x, b_layers, ctxs, gy,
-                                       tp_exec, rope, specs0, cfg)
-
-    def chunk_w(tapes):
-        return M.chunk_bwd_weight(tapes, specs0)
+    def _layers(cparams, count):
+        return [jax.tree.map(lambda a: a[i], cparams)
+                for i in range(count)]
 
     # --- trace shapes for context/tape buffers --------------------------
     x_sds = jax.ShapeDtypeStruct((bmb, seq, d_model), jnp.float32)
@@ -295,12 +365,53 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     # Buffer shapes are traced with an identity TPContext over the *local*
     # shard shapes — collectives preserve shapes, so the unit-mode buffers
     # match (eval_shape cannot bind mesh axis names).
-    tp0 = TPContext()
-    cp_sds = _local_sds(param_trees[0], tp.size, lead=2, strip=1)
-    _, ctx_sds = jax.eval_shape(lambda c, x: chunk_f(c, x, tp0),
-                                cp_sds, x_sds)
-    gx_sds, tape_sds, joint_sds = jax.eval_shape(
-        lambda c, cx, g: chunk_b(c, cx, g, tp0), cp_sds, ctx_sds, x_sds)
+    tp0 = TPContext(expert_size=ep_size)
+    cp_sds = {0: _local_sds(param_trees[0], tp.size, lead=2, strip=1,
+                            ep_size=ep_size)}
+    if two_chunks:
+        cp_sds[1] = _local_sds(param_trees[1], tp.size, lead=2, strip=1,
+                               ep_size=ep_size)
+
+    def _raw_sds(r, c):
+        count = r[1] - r[0]
+        _, cx = jax.eval_shape(
+            lambda cp, x: M.chunk_fwd(_layers(cp, count), tp0, x, rope,
+                                      specs_of(r), cfg), cp_sds[c], x_sds)
+        _, tps, _ = jax.eval_shape(
+            lambda cp, cxs, g: M.chunk_bwd_act(_layers(cp, count), tp0, cxs,
+                                               g, specs_of(r), cfg),
+            cp_sds[c], cx, x_sds)
+        return cx, tps
+
+    def _leaf_sig(tree):
+        return (jax.tree.structure(tree),
+                tuple((l.shape, str(l.dtype)) for l in jax.tree.leaves(tree)))
+
+    # Per-chunk ctx/tape buffers sized to the chunk's deepest stage.  The
+    # structure at stack position l must agree across every stage of the
+    # chunk that owns a layer there — one carry serves all devices.
+    ctx_sds, tape_sds = {}, {}
+    for c in chunk_ids:
+        per_rng = {r: _raw_sds(r, c) for r in dict.fromkeys(rng[c])}
+        buf_ctx, buf_tape = [], []
+        for l in range(lmax[c]):
+            owners = [r for r in per_rng if r[1] - r[0] > l]
+            ref = per_rng[owners[0]]
+            for r in owners[1:]:
+                got = per_rng[r]
+                if (_leaf_sig(ref[0][l]) != _leaf_sig(got[0][l])
+                        or _leaf_sig(ref[1][l]) != _leaf_sig(got[1][l])):
+                    raise ValueError(
+                        f"heterogeneous layer kinds at stack position {l} "
+                        f"of chunk {c} (ranges {owners[0]} vs {r}): stages "
+                        "sharing a chunk stack must align structurally — "
+                        "pass explicit partition ranges that align layer "
+                        "kinds, or run through pipeline.reference")
+            buf_ctx.append(ref[0][l])
+            buf_tape.append(ref[1][l])
+        ctx_sds[c] = buf_ctx
+        tape_sds[c] = buf_tape
+
     head_sds = _local_sds(param_trees[3], tp.size, lead=0, strip=0)
     _, hctx_sds = jax.eval_shape(
         lambda hp, x, lab: M.head_fwd(hp, tp0, x, lab, cfg),
@@ -314,6 +425,46 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
             lambda s: jnp.zeros(((lead,) + s.shape) if lead else s.shape,
                                 s.dtype), sds_tree)
 
+    def _pad_to(buf_sds, vals):
+        """Pad a per-layer ctx/tape list to the buffer depth with zeros."""
+        return list(vals) + [zeros_of(s) for s in buf_sds[len(vals):]]
+
+    def make_chunk_ops(sig):
+        """Chunk executors specialised to one partition signature: each
+        loops its chunk's own static layer count and pads ctx/tape lists to
+        the shared buffer depth."""
+        rr = dict(zip(chunk_ids, sig))
+
+        def chunk_f(which, cparams, x, tpc=tp_exec):
+            r = rr[which]
+            y, ctxs = M.chunk_fwd(_layers(cparams, r[1] - r[0]), tpc, x,
+                                  rope, specs_of(r), cfg)
+            return y, _pad_to(ctx_sds[which], ctxs)
+
+        def chunk_b(which, cparams, ctxs, gy, tpc=tp_exec):
+            r = rr[which]
+            gx, tapes, joints = M.chunk_bwd_act(
+                _layers(cparams, r[1] - r[0]), tpc, ctxs[:r[1] - r[0]], gy,
+                specs_of(r), cfg)
+            return gx, _pad_to(tape_sds[which], tapes), joints
+
+        def chunk_fb(fck, bck, f_cparams, x, b_cparams, ctxs, gy):
+            rf, rb = rr[fck], rr[bck]
+            y, fcx, gx, tapes, joints = M.chunk_fwd_bwd_braided(
+                _layers(f_cparams, rf[1] - rf[0]), x,
+                _layers(b_cparams, rb[1] - rb[0]), ctxs[:rb[1] - rb[0]], gy,
+                tp_exec, rope, specs_of(rf), cfg, b_specs=specs_of(rb))
+            return (y, _pad_to(ctx_sds[fck], fcx), gx,
+                    _pad_to(tape_sds[bck], tapes), joints)
+
+        def chunk_w(which, tapes):
+            r = rr[which]
+            return M.chunk_bwd_weight(tapes[:r[1] - r[0]], specs_of(r))
+
+        return chunk_f, chunk_b, chunk_fb, chunk_w
+
+    sig_ops = [make_chunk_ops(s) for s in sigs]
+
     def run(c0, c1, embed_p, head_p, tokens, labels):
         """Per-device body (inside shard_map).  c0/c1 carry a leading
         stage dim of 1 (c1 is the empty pytree for flat placements)."""
@@ -322,7 +473,7 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
         zrow = lambda: jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32)
         carry = {
             "x0": zrow(), "g0": zrow(),
-            "ctx0": zeros_of(ctx_sds, m), "tape0": zeros_of(tape_sds, m),
+            "ctx0": zeros_of(ctx_sds[0], m), "tape0": zeros_of(tape_sds[0], m),
             "hctx": zeros_of(hctx_sds, m), "htape": zeros_of(htape_sds, m),
             "loss": jnp.zeros((m,), jnp.float32),
             "a0": _zeros_like_tree(c0),
@@ -332,7 +483,8 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
         if two_chunks:
             carry.update({
                 "x1": zrow(), "g1": zrow(),
-                "ctx1": zeros_of(ctx_sds, m), "tape1": zeros_of(tape_sds, m),
+                "ctx1": zeros_of(ctx_sds[1], m),
+                "tape1": zeros_of(tape_sds[1], m),
                 "a1": _zeros_like_tree(c1),
             })
 
@@ -382,147 +534,153 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                          ah=add_partial(carry["ah"], hjoint))
             return carry, gy
 
-        # ---- F branches -------------------------------------------------
+        # ---- branch bodies, specialised per partition signature --------
         def f_nop(carry, mb):
             return carry, acts_out()
 
-        def _f_chunk(carry, mb, which, src):
-            cp, ck = (c0, "ctx0") if which == 0 else (c1, "ctx1")
-            y, ctxs = chunk_f(cp, src)
-            carry = dict(carry, **{ck: _write(carry[ck], mb, ctxs)})
-            return carry, y
-
-        def f0(carry, mb):
-            carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
-            return carry, acts_out(x0=(y, jnp.int32(1)))
-
-        def f0_embed(carry, mb):
-            batch = ({"tokens": _read(tokens, mb)} if cfg.frontend == "text"
-                     else {"embeds": _read(tokens, mb)})
-            x, _ = M.embed_fwd(embed_p, batch, cfg)
-            carry, y = _f_chunk(carry, mb, 0, x)
-            return carry, acts_out(x0=(y, jnp.int32(1)))
-
-        def f0_turn(carry, mb):
-            """vshape: chunk-0 output enters chunk 1 on the same device."""
-            carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
-            carry = dict(carry, x1=_write(carry["x1"], mb, y))
-            return carry, acts_out()
-
-        def f0_send1(carry, mb):
-            """parallel: chunk-0 output wraps to device 0's chunk 1."""
-            carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
-            return carry, acts_out(x1=(y, jnp.int32(1)))
-
-        def f0_loss(carry, mb):
-            """flat: last stage forward + loss head, no output."""
-            carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
-            return _head_f(carry, mb, y), acts_out()
-
-        def f1(carry, mb):
-            carry, y = _f_chunk(carry, mb, 1, _read(carry["x1"], mb))
-            return carry, acts_out(x1=(y, jnp.int32(1)))
-
-        def f1_loss(carry, mb):
-            carry, y = _f_chunk(carry, mb, 1, _read(carry["x1"], mb))
-            return _head_f(carry, mb, y), acts_out()
-
-        # ---- B branches -------------------------------------------------
         def b_nop(carry, mb):
             return carry, grads_out()
 
-        def _b_chunk(carry, mb, which, gy):
-            cp = c0 if which == 0 else c1
-            ctxs = _read(carry["ctx0" if which == 0 else "ctx1"], mb)
-            gx, tapes, joints = chunk_b(cp, ctxs, gy)
-            ck = "tape0" if which == 0 else "tape1"
-            ak = "a0" if which == 0 else "a1"
-            carry = dict(carry)
-            carry[ck] = _write(carry[ck], mb, tapes)
-            acc = carry[ak]
-            for i, j in enumerate(joints):
-                acc = add_layer(acc, i, j)
-            carry[ak] = acc
-            return carry, gx
-
-        def b0(carry, mb):
-            carry, gx = _b_chunk(carry, mb, 0, _read(carry["g0"], mb))
-            return carry, grads_out(g0=(gx, jnp.int32(1)))
-
-        def b0_embed(carry, mb):
-            carry, gx = _b_chunk(carry, mb, 0, _read(carry["g0"], mb))
-            batch = ({"tokens": _read(tokens, mb)} if cfg.frontend == "text"
-                     else {"embeds": _read(tokens, mb)})
-            _, ectx = M.embed_fwd(embed_p, batch, cfg)
-            ge = M.embed_bwd_weight(embed_p, ectx, gx)
-            carry = dict(carry, ae=add_partial(carry["ae"], ge))
-            return carry, grads_out()
-
-        def b0_loss(carry, mb):
-            """flat: loss head backward + last stage backward."""
-            carry, gy = _head_b(carry, mb)
-            carry, gx = _b_chunk(carry, mb, 0, gy)
-            return carry, grads_out(g0=(gx, jnp.int32(1)))
-
-        def b1(carry, mb):
-            carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
-            return carry, grads_out(g1=(gx, jnp.int32(1)))
-
-        def b1_turn(carry, mb):
-            """vshape: chunk-1 gradient enters chunk 0 on the same device."""
-            carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
-            carry = dict(carry, g0=_write(carry["g0"], mb, gx))
-            return carry, grads_out()
-
-        def b1_send0(carry, mb):
-            """parallel: chunk-1 gradient wraps to device p-1's chunk 0."""
-            carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
-            return carry, grads_out(g0=(gx, jnp.int32(1)))
-
-        def b1_loss(carry, mb):
-            carry, gy = _head_b(carry, mb)
-            carry, gx = _b_chunk(carry, mb, 1, gy)
-            return carry, grads_out(g1=(gx, jnp.int32(1)))
-
-        # ---- W branches -------------------------------------------------
         def w_nop(carry, mb):
             return carry
 
-        def _w_chunk(carry, mb, which):
-            ck = "tape0" if which == 0 else "tape1"
-            ak = "a0" if which == 0 else "a1"
-            gws = chunk_w(_read(carry[ck], mb))
-            acc = carry[ak]
-            for i, gw in enumerate(gws):
-                acc = add_layer(acc, i, gw)
-            carry = dict(carry)
-            carry[ak] = acc
-            return carry
+        def make_defs(ops):
+            chunk_f, chunk_b, _, chunk_w = ops
 
-        def _w_head(carry, mb):
-            gh = M.head_bwd_weight(_read(carry["htape"], mb))
-            return dict(carry, ah=add_partial(carry["ah"], gh))
+            def _f_chunk(carry, mb, which, src):
+                cp, ck = (c0, "ctx0") if which == 0 else (c1, "ctx1")
+                y, ctxs = chunk_f(which, cp, src)
+                carry = dict(carry, **{ck: _write(carry[ck], mb, ctxs)})
+                return carry, y
 
-        def w0(carry, mb):
-            return _w_chunk(carry, mb, 0)
+            def f0(carry, mb):
+                carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
+                return carry, acts_out(x0=(y, jnp.int32(1)))
 
-        def w0_head(carry, mb):
-            return _w_head(_w_chunk(carry, mb, 0), mb)
+            def f0_embed(carry, mb):
+                batch = ({"tokens": _read(tokens, mb)}
+                         if cfg.frontend == "text"
+                         else {"embeds": _read(tokens, mb)})
+                x, _ = M.embed_fwd(embed_p, batch, cfg)
+                carry, y = _f_chunk(carry, mb, 0, x)
+                return carry, acts_out(x0=(y, jnp.int32(1)))
 
-        def w1(carry, mb):
-            return _w_chunk(carry, mb, 1)
+            def f0_turn(carry, mb):
+                """vshape: chunk-0 output enters chunk 1 on the device."""
+                carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
+                carry = dict(carry, x1=_write(carry["x1"], mb, y))
+                return carry, acts_out()
 
-        def w1_head(carry, mb):
-            return _w_head(_w_chunk(carry, mb, 1), mb)
+            def f0_send1(carry, mb):
+                """parallel: chunk-0 output wraps to device 0's chunk 1."""
+                carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
+                return carry, acts_out(x1=(y, jnp.int32(1)))
 
-        fdefs = dict(f_nop=f_nop, f0=f0, f0_embed=f0_embed, f0_turn=f0_turn,
-                     f0_send1=f0_send1, f0_loss=f0_loss, f1=f1,
-                     f1_loss=f1_loss)
-        bdefs = dict(b_nop=b_nop, b0=b0, b0_embed=b0_embed, b0_loss=b0_loss,
-                     b1=b1, b1_turn=b1_turn, b1_send0=b1_send0,
-                     b1_loss=b1_loss)
-        wdefs = dict(w_nop=w_nop, w0=w0, w0_head=w0_head, w1=w1,
-                     w1_head=w1_head)
+            def f0_loss(carry, mb):
+                """flat: last stage forward + loss head, no output."""
+                carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
+                return _head_f(carry, mb, y), acts_out()
+
+            def f1(carry, mb):
+                carry, y = _f_chunk(carry, mb, 1, _read(carry["x1"], mb))
+                return carry, acts_out(x1=(y, jnp.int32(1)))
+
+            def f1_loss(carry, mb):
+                carry, y = _f_chunk(carry, mb, 1, _read(carry["x1"], mb))
+                return _head_f(carry, mb, y), acts_out()
+
+            def _b_chunk(carry, mb, which, gy):
+                cp = c0 if which == 0 else c1
+                ctxs = _read(carry["ctx0" if which == 0 else "ctx1"], mb)
+                gx, tapes, joints = chunk_b(which, cp, ctxs, gy)
+                ck = "tape0" if which == 0 else "tape1"
+                ak = "a0" if which == 0 else "a1"
+                carry = dict(carry)
+                carry[ck] = _write(carry[ck], mb, tapes)
+                acc = carry[ak]
+                for i, j in enumerate(joints):
+                    acc = add_layer(acc, i, j)
+                carry[ak] = acc
+                return carry, gx
+
+            def b0(carry, mb):
+                carry, gx = _b_chunk(carry, mb, 0, _read(carry["g0"], mb))
+                return carry, grads_out(g0=(gx, jnp.int32(1)))
+
+            def b0_embed(carry, mb):
+                carry, gx = _b_chunk(carry, mb, 0, _read(carry["g0"], mb))
+                batch = ({"tokens": _read(tokens, mb)}
+                         if cfg.frontend == "text"
+                         else {"embeds": _read(tokens, mb)})
+                _, ectx = M.embed_fwd(embed_p, batch, cfg)
+                ge = M.embed_bwd_weight(embed_p, ectx, gx)
+                carry = dict(carry, ae=add_partial(carry["ae"], ge))
+                return carry, grads_out()
+
+            def b0_loss(carry, mb):
+                """flat: loss head backward + last stage backward."""
+                carry, gy = _head_b(carry, mb)
+                carry, gx = _b_chunk(carry, mb, 0, gy)
+                return carry, grads_out(g0=(gx, jnp.int32(1)))
+
+            def b1(carry, mb):
+                carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
+                return carry, grads_out(g1=(gx, jnp.int32(1)))
+
+            def b1_turn(carry, mb):
+                """vshape: chunk-1 grad enters chunk 0 on the device."""
+                carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
+                carry = dict(carry, g0=_write(carry["g0"], mb, gx))
+                return carry, grads_out()
+
+            def b1_send0(carry, mb):
+                """parallel: chunk-1 grad wraps to device p-1's chunk 0."""
+                carry, gx = _b_chunk(carry, mb, 1, _read(carry["g1"], mb))
+                return carry, grads_out(g0=(gx, jnp.int32(1)))
+
+            def b1_loss(carry, mb):
+                carry, gy = _head_b(carry, mb)
+                carry, gx = _b_chunk(carry, mb, 1, gy)
+                return carry, grads_out(g1=(gx, jnp.int32(1)))
+
+            def _w_chunk(carry, mb, which):
+                ck = "tape0" if which == 0 else "tape1"
+                ak = "a0" if which == 0 else "a1"
+                gws = chunk_w(which, _read(carry[ck], mb))
+                acc = carry[ak]
+                for i, gw in enumerate(gws):
+                    acc = add_layer(acc, i, gw)
+                carry = dict(carry)
+                carry[ak] = acc
+                return carry
+
+            def _w_head(carry, mb):
+                gh = M.head_bwd_weight(_read(carry["htape"], mb))
+                return dict(carry, ah=add_partial(carry["ah"], gh))
+
+            def w0(carry, mb):
+                return _w_chunk(carry, mb, 0)
+
+            def w0_head(carry, mb):
+                return _w_head(_w_chunk(carry, mb, 0), mb)
+
+            def w1(carry, mb):
+                return _w_chunk(carry, mb, 1)
+
+            def w1_head(carry, mb):
+                return _w_head(_w_chunk(carry, mb, 1), mb)
+
+            fdefs = dict(f_nop=f_nop, f0=f0, f0_embed=f0_embed,
+                         f0_turn=f0_turn, f0_send1=f0_send1, f0_loss=f0_loss,
+                         f1=f1, f1_loss=f1_loss)
+            bdefs = dict(b_nop=b_nop, b0=b0, b0_embed=b0_embed,
+                         b0_loss=b0_loss, b1=b1, b1_turn=b1_turn,
+                         b1_send0=b1_send0, b1_loss=b1_loss)
+            wdefs = dict(w_nop=w_nop, w0=w0, w0_head=w0_head, w1=w1,
+                         w1_head=w1_head)
+            return fdefs, bdefs, wdefs
+
+        defs_by_sig = [make_defs(ops) for ops in sig_ops]
 
         if ablate in ("compute", "both"):
             # --breakdown stubs: per-role buffer touch + emit, preserving
@@ -562,11 +720,16 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                 b1_turn=_touch(grads_out, "g1", store="g0"),
                 b1_send0=_touch(grads_out, "g1", emit="g0"),
                 b1_loss=_touch(grads_out, "g1", emit="g1"))
-            wdefs = {k: w_nop for k in wdefs}
+            wdefs = {n: w_nop for n in SL.W_BRANCHES[pl.kind]}
+            defs_by_sig = [(fdefs, bdefs, wdefs)] * len(sigs)
 
-        f_branches = [fdefs[n] for n in SL.F_BRANCHES[pl.kind]]
-        b_branches = [bdefs[n] for n in SL.B_BRANCHES[pl.kind]]
-        w_branches = [wdefs[n] for n in SL.W_BRANCHES[pl.kind]]
+        # Per-signature branch lists: arm (sg, code) loops sg's layer counts.
+        f_br = [[d[0][n] for n in SL.F_BRANCHES[pl.kind]]
+                for d in defs_by_sig]
+        b_br = [[d[1][n] for n in SL.B_BRANCHES[pl.kind]]
+                for d in defs_by_sig]
+        w_br = [[d[2][n] for n in SL.W_BRANCHES[pl.kind]]
+                for d in defs_by_sig]
 
         # ---- braided composite F&B arms (paper §4, Fig. 1) --------------
         # A composite slot (both F and B active) lowers as ONE braided
@@ -619,7 +782,8 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                         grads_out())
             return carry, grads_out(g1=(gx, jnp.int32(1)))   # b1 / b1_loss
 
-        def braided_fb(fname, bname):
+        def braided_fb(sg, fname, bname):
+            chunk_fb = sig_ops[sg][2]
             fck, bck = F_CHUNK[fname], B_CHUNK[bname]
             fcp = c0 if fck == 0 else c1
             bcp = c0 if bck == 0 else c1
@@ -633,8 +797,8 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                 x = _embed_x(fmb) if src is None else _read(carry[src], fmb)
                 ctxs_in = _read(carry[bctx_key], bmb_)
                 carry, gy = _b_gy(bname, carry, bmb_)
-                y, ctxs, gx, tapes, joints = chunk_fb(fcp, x, bcp, ctxs_in,
-                                                      gy)
+                y, ctxs, gx, tapes, joints = chunk_fb(fck, bck, fcp, x, bcp,
+                                                      ctxs_in, gy)
                 carry = dict(carry, **{
                     fctx_key: _write(carry[fctx_key], fmb, ctxs)})
                 carry[tape_key] = _write(carry[tape_key], bmb_, tapes)
@@ -680,26 +844,47 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                                  **{s: _write(carry[s], row, val)})
             return carry
 
-        def generic_slot(carry, codes_t):
+        # Generic lowerings dispatch through compact per-slot tables over
+        # the distinct (role code, partition signature) combinations present
+        # in the grid — uniform partitions (one signature) reduce to the
+        # plain per-role switch.
+        n_slots = codes_np.shape[0]
+
+        def _sig_tab(col, arms_by_sig):
+            keys = sorted({(int(codes_np[t, d, col]), int(sig_id[d]))
+                           for t in range(n_slots) for d in range(p)})
+            tab = np.array([[keys.index((int(codes_np[t, d, col]),
+                                         int(sig_id[d])))
+                             for d in range(p)]
+                            for t in range(n_slots)], np.int32)
+            return [arms_by_sig[sg][c] for c, sg in keys], tab
+
+        if not fuse:
+            f_arms, f_tab = _sig_tab(0, f_br)
+            b_arms, b_tab = _sig_tab(2, b_br)
+            w_arms, w_tab = _sig_tab(4, w_br)
+
+        def generic_slot(carry, xs_t):
+            codes_t, ft, bt, wt = xs_t
             my = codes_t[me]
             fmb, bmb_, wmb = my[1], my[3], my[5]
-            carry, acts = jax.lax.switch(my[0], f_branches, carry, fmb)
-            carry, grads = jax.lax.switch(my[2], b_branches, carry, bmb_)
-            carry = jax.lax.switch(my[4], w_branches, carry, wmb)
+            carry, acts = jax.lax.switch(ft[me], f_arms, carry, fmb)
+            carry, grads = jax.lax.switch(bt[me], b_arms, carry, bmb_)
+            carry = jax.lax.switch(wt[me], w_arms, carry, wmb)
             if not do_exchange:
                 return carry, None
             return _exchange(carry, acts, grads, fmb, bmb_), None
 
         def generic_braid_slot(carry, xs_t):
             """Generic lowering under braid_tp: F and B dispatch through one
-            joint switch over the grid's distinct static (F, B) role pairs
-            so composite pairs can lower as a single braided call."""
-            codes_t, pc_t = xs_t
+            joint switch over the grid's distinct static (F, B, signature)
+            triples so composite pairs can lower as a single braided call."""
+            codes_t, pc_t, wt = xs_t
             my = codes_t[me]
             fmb, bmb_, wmb = my[1], my[3], my[5]
             carry, acts, grads = jax.lax.switch(pc_t[me], pair_arms, carry,
                                                 fmb, bmb_)
-            carry = jax.lax.switch(my[4], w_branches, carry, wmb)
+            carry = jax.lax.switch(wt[me], w_arms, carry, wmb)
             if not do_exchange:
                 return carry, None
             return _exchange(carry, acts, grads, fmb, bmb_), None
@@ -707,25 +892,26 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
         if braid and not fuse:
             fb_names = SL.F_BRANCHES[pl.kind]
             bb_names = SL.B_BRANCHES[pl.kind]
-            pairs = sorted({(int(c[0]), int(c[2]))
-                            for c in codes_np.reshape(-1, 6)})
+            pairs = sorted({(int(codes_np[t, d, 0]), int(codes_np[t, d, 2]),
+                             int(sig_id[d]))
+                            for t in range(n_slots) for d in range(p)})
             pair_codes = np.array(
                 [[pairs.index((int(codes_np[t, d, 0]),
-                               int(codes_np[t, d, 2])))
+                               int(codes_np[t, d, 2]), int(sig_id[d])))
                   for d in range(p)]
-                 for t in range(codes_np.shape[0])], np.int32)
+                 for t in range(n_slots)], np.int32)
 
-            def pair_arm(fc, bc):
+            def pair_arm(fc, bc, sg):
                 if fc > 0 and bc > 0:
-                    return braided_fb(fb_names[fc], bb_names[bc])
+                    return braided_fb(sg, fb_names[fc], bb_names[bc])
 
                 def seq(carry, fmb, bmb_):
-                    carry, acts = f_branches[fc](carry, fmb)
-                    carry, grads = b_branches[bc](carry, bmb_)
+                    carry, acts = f_br[sg][fc](carry, fmb)
+                    carry, grads = b_br[sg][bc](carry, bmb_)
                     return carry, acts, grads
                 return seq
 
-            pair_arms = [pair_arm(fc, bc) for fc, bc in pairs]
+            pair_arms = [pair_arm(*k) for k in pairs]
 
         def run_segment(carry, seg):
             """Fused lowering of one periodic segment: branch bodies
@@ -738,10 +924,10 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
             program per slot."""
             k = seg.period
 
-            def arm_of(fc, bc, wc):
-                wf = w_branches[wc]
+            def arm_of(fc, bc, wc, sg):
+                wf = w_br[sg][wc]
                 if braid and fc > 0 and bc > 0:
-                    fb = braided_fb(SL.F_BRANCHES[pl.kind][fc],
+                    fb = braided_fb(sg, SL.F_BRANCHES[pl.kind][fc],
                                     SL.B_BRANCHES[pl.kind][bc])
 
                     def braided_arm(carry, mb3):
@@ -750,8 +936,8 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                         return (carry, tuple(v for v, _ in acts),
                                 tuple(v for v, _ in grads))
                     return braided_arm
-                ff = f_branches[fc]
-                bf = b_branches[bc]
+                ff = f_br[sg][fc]
+                bf = b_br[sg][bc]
 
                 def arm(carry, mb3):
                     carry, acts = ff(carry, mb3[0])
@@ -763,10 +949,11 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
 
             arms, row_id = [], []
             for ph in seg.phases:
-                distinct = list(dict.fromkeys(ph))
-                arms.append([arm_of(*r) for r in distinct])
+                rows = [(r, int(sig_id[d])) for d, r in enumerate(ph)]
+                distinct = list(dict.fromkeys(rows))
+                arms.append([arm_of(*r, sg) for r, sg in distinct])
                 row_id.append(jnp.asarray(
-                    np.array([distinct.index(r) for r in ph], np.int32)))
+                    np.array([distinct.index(r) for r in rows], np.int32)))
 
             def one_phase(carry, j, mb_t, rr_t):
                 # mb_t: (p, 3), rr_t: (p, n_live of phase j)
@@ -814,10 +1001,14 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
         elif braid:
             carry, _ = jax.lax.scan(generic_braid_slot, carry,
                                     (jnp.asarray(codes_np),
-                                     jnp.asarray(pair_codes)))
+                                     jnp.asarray(pair_codes),
+                                     jnp.asarray(w_tab)))
         else:
             carry, _ = jax.lax.scan(generic_slot, carry,
-                                    jnp.asarray(codes_np))
+                                    (jnp.asarray(codes_np),
+                                     jnp.asarray(f_tab),
+                                     jnp.asarray(b_tab),
+                                     jnp.asarray(w_tab)))
         loss = jax.lax.psum(carry["loss"].sum() * scale, stage_axis)
         g0 = jax.tree.map(lambda a: a[None], carry["a0"])
         g1 = (jax.tree.map(lambda a: a[None], carry["a1"])
@@ -830,11 +1021,14 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
 
 
 def stage_param_specs(param_trees, *, stage_axis: str = "stage",
-                      model_axis: Optional[str] = None) -> dict:
+                      model_axis: Optional[str] = None,
+                      expert_axis: Optional[str] = None) -> dict:
     """PartitionSpec dict for the stage-layout state params
     ``{"c0", "c1", "embed", "head"}`` given (c0, c1, embed, head) trees."""
-    return {"c0": tp_specs(param_trees[0], model_axis, stage_axis, lead=2),
-            "c1": tp_specs(param_trees[1], model_axis, stage_axis, lead=2),
+    return {"c0": tp_specs(param_trees[0], model_axis, stage_axis, lead=2,
+                           expert_axis=expert_axis),
+            "c1": tp_specs(param_trees[1], model_axis, stage_axis, lead=2,
+                           expert_axis=expert_axis),
             "embed": tp_specs(param_trees[2], None, None),
             "head": tp_specs(param_trees[3], model_axis, None)}
 
@@ -843,9 +1037,11 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                         m: int, mb_shape, param_trees, *,
                         stage_axis: str = "stage",
                         model_axis: Optional[str] = None,
+                        expert_axis: Optional[str] = None,
                         fuse_slots: bool = True,
                         ablate: Optional[str] = None,
-                        braid_tp: bool = False):
+                        braid_tp: bool = False,
+                        part=None):
     """Returns a jitted SPMD function
     ``step(c0, c1, embed_p, head_p, tokens, labels) -> (loss, g0, g1,
     g_embed, g_head)`` executing the schedule over the ``stage`` (and
@@ -865,10 +1061,12 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     """
     run = _pipeline_program(cfg, tables, pl, mesh, m, mb_shape, param_trees,
                             stage_axis=stage_axis, model_axis=model_axis,
-                            fuse=fuse_slots, ablate=ablate, braid_tp=braid_tp)
+                            expert_axis=expert_axis,
+                            fuse=fuse_slots, ablate=ablate, braid_tp=braid_tp,
+                            part=part)
     rep = P()
     sp = stage_param_specs(param_trees, stage_axis=stage_axis,
-                           model_axis=model_axis)
+                           model_axis=model_axis, expert_axis=expert_axis)
     fn = shard_map(
         run, mesh=mesh,
         in_specs=(sp["c0"], sp["c1"], sp["embed"], sp["head"], rep, rep),
@@ -879,15 +1077,17 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
 
 
 def _dup_factors(param_trees, mesh: Mesh, *, stage_axis: str,
-                 model_axis: Optional[str]) -> dict:
-    """Per-leaf replica counts of the *gradients* across the (stage, model)
-    mesh axes, keyed like the state params dict.  Block grads are unique per
-    stage and TP-sharded where the param is; embed/head grads come out of
-    the program psum'd over ``stage`` so every stage row holds a full copy.
-    Used to weight local sum-of-squares so the global grad norm counts every
-    element exactly once."""
+                 model_axis: Optional[str],
+                 expert_axis: Optional[str] = None) -> dict:
+    """Per-leaf replica counts of the *gradients* across the (stage, expert,
+    model) mesh axes, keyed like the state params dict.  Block grads are
+    unique per stage and TP/EP-sharded where the param is; embed/head grads
+    come out of the program psum'd over ``stage`` so every stage row holds a
+    full copy.  Used to weight local sum-of-squares so the global grad norm
+    counts every element exactly once."""
     p = mesh.shape[stage_axis]
     tp_size = mesh.shape[model_axis] if model_axis else 1
+    ep_size = mesh.shape[expert_axis] if expert_axis else 1
 
     def group(tree, lead, base):
         def one(path, leaf):
@@ -898,12 +1098,16 @@ def _dup_factors(param_trees, mesh: Mesh, *, stage_axis: str,
                     break
             ax = (_tp_axis_of(name, leaf.ndim - lead)
                   if model_axis else None)
-            return base * (1 if ax is not None else tp_size)
+            eax = (_ep_axis_of(name, leaf.ndim - lead)
+                   if expert_axis else None)
+            return (base * (1 if ax is not None else tp_size)
+                    * (1 if eax is not None else ep_size))
         return jax.tree_util.tree_map_with_path(one, tree)
 
     return {"c0": group(param_trees[0], 2, 1),
             "c1": group(param_trees[1], 2, 1),
-            "embed": jax.tree.map(lambda _: p * tp_size, param_trees[2]),
+            "embed": jax.tree.map(lambda _: p * tp_size * ep_size,
+                                  param_trees[2]),
             "head": group(param_trees[3], 0, p)}
 
 
@@ -912,8 +1116,10 @@ def build_pipeline_train_step(cfg: ModelConfig, tables, pl: Placement,
                               oc: OptConfig, *,
                               stage_axis: str = "stage",
                               model_axis: Optional[str] = None,
+                              expert_axis: Optional[str] = None,
                               fuse_slots: bool = True,
-                              braid_tp: bool = False):
+                              braid_tp: bool = False,
+                              part=None):
     """Fused pipeline *train* step: schedule execution, global-norm
     clipping and the AdamW update all under one ``shard_map`` — stacked
     params and optimizer moments never leave the mesh between steps.
@@ -932,14 +1138,16 @@ def build_pipeline_train_step(cfg: ModelConfig, tables, pl: Placement,
     """
     run = _pipeline_program(cfg, tables, pl, mesh, m, mb_shape, param_trees,
                             stage_axis=stage_axis, model_axis=model_axis,
-                            fuse=fuse_slots, braid_tp=braid_tp)
+                            expert_axis=expert_axis,
+                            fuse=fuse_slots, braid_tp=braid_tp, part=part)
     sp = stage_param_specs(param_trees, stage_axis=stage_axis,
-                           model_axis=model_axis)
+                           model_axis=model_axis, expert_axis=expert_axis)
     ospec = {"mu": sp, "nu": sp, "step": P()}
     dup = _dup_factors(param_trees, mesh, stage_axis=stage_axis,
-                       model_axis=model_axis)
+                       model_axis=model_axis, expert_axis=expert_axis)
     lead = {"c0": 2, "c1": 2, "embed": 0, "head": 0}
-    axes = ((stage_axis, model_axis) if model_axis else (stage_axis,))
+    axes = tuple(a for a in (stage_axis, expert_axis, model_axis)
+                 if a is not None)
 
     def train(params, opt, tokens, labels):
         loss, g0, g1, ge, gh = run(params["c0"], params["c1"],

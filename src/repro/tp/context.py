@@ -150,6 +150,11 @@ class TPContext:
     # rendezvouses over all devices and deadlocks there, while all-reduce
     # rendezvous is per replica group.  See ``_ring_hop``.
     safe_ring: bool = False
+    # Expert-parallel axis: MoE experts shard their leading E dim over this
+    # mesh axis while activations and routing stay replicated across it, so
+    # routing (and capacity-overflow drops) are bitwise identical to EP=1.
+    expert_axis: Optional[str] = None
+    expert_size: int = 1
 
     def psum(self, x):
         if self.axis is None:
@@ -212,6 +217,51 @@ class TPContext:
             partial + jax.lax.stop_gradient(residual) / self.size, tile_axis,
             safe=self.safe_ring)
 
+    # ---- expert-parallel forms -----------------------------------------
+
+    def ep_index(self):
+        if self.expert_axis is None:
+            return jnp.int32(0)
+        return jax.lax.axis_index(self.expert_axis)
+
+    def ep_slice(self, x, edim: int):
+        """Full expert-dim buffer -> this rank's contiguous expert slice
+        (rank r owns experts [r*E/ep, (r+1)*E/ep)).
+
+        ``expert_size`` governs shapes and ``expert_axis`` the collectives:
+        with size set but no axis (shape tracing under ``eval_shape``, which
+        cannot bind mesh axis names) this is a static rank-0 slice."""
+        if self.expert_size == 1:
+            return x
+        e_local = x.shape[edim] // self.expert_size
+        return jax.lax.dynamic_slice_in_dim(
+            x, self.ep_index() * e_local, e_local, edim)
+
+    def ep_all_gather(self, x, edim: int):
+        """Local expert slice -> the full expert-dim buffer, replicated over
+        the expert axis.  This is the combine-side collective of expert
+        parallelism (the dispatch side is a local slice here because the
+        token buffers are replicated across the axis).
+
+        ``safe_ring=True`` emulates the all-gather with a masked psum (one
+        contributor per expert slot — exact) for the same divergent-control-
+        flow reason as ``_ring_hop``; otherwise a real tiled ``all_gather``.
+        Axis-less mode (shape tracing) tiles the local slice.
+        """
+        if self.expert_size == 1:
+            return x
+        if self.expert_axis is None:
+            return jnp.concatenate([x] * self.expert_size, axis=edim)
+        if not self.safe_ring:
+            return jax.lax.all_gather(x, self.expert_axis, axis=edim,
+                                      tiled=True)
+        e_local = x.shape[edim]
+        full = list(x.shape)
+        full[edim] = e_local * self.expert_size
+        buf = jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros(full, x.dtype), x, self.ep_index() * e_local, edim)
+        return jax.lax.psum(buf, self.expert_axis)
+
 
 class OverlapTP:
     """Deferring proxy over a :class:`TPContext` for the braided executor.
@@ -247,3 +297,20 @@ class OverlapTP:
 
     def psum_out(self, x) -> PendingPsum:
         return self.base.start_psum(x)
+
+    @property
+    def expert_axis(self):
+        return self.base.expert_axis
+
+    @property
+    def expert_size(self):
+        return self.base.expert_size
+
+    def ep_index(self):
+        return self.base.ep_index()
+
+    def ep_slice(self, x, edim: int):
+        return self.base.ep_slice(x, edim)
+
+    def ep_all_gather(self, x, edim: int):
+        return self.base.ep_all_gather(x, edim)

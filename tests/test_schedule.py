@@ -268,3 +268,93 @@ def test_segment_grid_periodic_steady_state():
         codes = SL.encode(SL.to_slots(tables, pl), pl)
         assert any(s.period > 1
                    for s in SL.segment_grid(codes, pl.kind)), kind
+
+
+# ---------------------------------------------------------------------------
+# Cost-balanced layer partitioning (core.schedule.partition).
+# ---------------------------------------------------------------------------
+
+def _part_cfg(n_layers):
+    from repro.configs import get_config
+    return get_config("qwen3-4b").reduced(n_layers=n_layers, d_model=64,
+                                          n_heads=4, vocab=128)
+
+
+def _brute_bottleneck(costs, n_vs, weight):
+    """Exhaustive min over contiguous partitions of max weighted stage cost."""
+    import itertools
+    n = len(costs)
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, n), n_vs - 1):
+        bnds = [0, *cuts, n]
+        mx = max(w * sum(costs[a:b])
+                 for w, (a, b) in zip(weight, zip(bnds, bnds[1:])))
+        best = min(best, mx)
+    return best
+
+
+@pytest.mark.parametrize("n,n_vs", [(4, 2), (7, 3), (10, 4), (12, 4),
+                                    (9, 8), (5, 5)])
+def test_partition_uniform_costs_match_uniform_ranges(n, n_vs):
+    """With homogeneous layers the cost-balanced split must reproduce the
+    naive near-uniform baseline exactly (the earliest-heavy tie-break)."""
+    cfg = _part_cfg(n)
+    assert sch.partition(cfg, n_vs) == sch.uniform_ranges(n, n_vs)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n,n_vs,vit", [(9, 3, 1.0), (10, 4, 1.0),
+                                        (10, 4, 3.0), (8, 4, 0.5)])
+def test_partition_bottleneck_optimal(seed, n, n_vs, vit):
+    """The two-pass DP attains the exact brute-force bottleneck under
+    arbitrary per-layer costs and stage-0 weighting."""
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.5, 4.0, size=n).tolist()
+    weight = [vit if s == 0 else 1.0 for s in range(n_vs)]
+    part = sch.partition(_part_cfg(n), n_vs, vit_factor=vit, costs=costs)
+    assert part[0][0] == 0 and part[-1][1] == n
+    assert all(a < b for a, b in part)
+    got = max(w * sum(costs[a:b]) for w, (a, b) in zip(weight, part))
+    want = _brute_bottleneck(costs, n_vs, weight)
+    assert got <= want + 1e-9
+
+
+def test_partition_vit_factor_lightens_stage0():
+    """A heavy resident ViT frontend (vit_factor > 1) must shed layers from
+    virtual stage 0 relative to the uniform split."""
+    cfg = _part_cfg(12)
+    base = sch.partition(cfg, 4)
+    vit = sch.partition(cfg, 4, vit_factor=4.0)
+    assert base[0][1] - base[0][0] == 3
+    assert vit[0][1] - vit[0][0] < 3
+
+
+def test_partition_explicit_ranges():
+    cfg = _part_cfg(6)
+    part = ((0, 1), (1, 5), (5, 6))
+    assert sch.partition(cfg, 3, ranges=part) == part
+    with pytest.raises(ValueError):            # gap
+        sch.partition(cfg, 3, ranges=((0, 1), (2, 5), (5, 6)))
+    with pytest.raises(ValueError):            # wrong count
+        sch.partition(cfg, 3, ranges=((0, 3), (3, 6)))
+    with pytest.raises(ValueError):            # not covering
+        sch.partition(cfg, 3, ranges=((0, 1), (1, 2), (2, 5)))
+    # empty stage allowed in explicit mode (reference executor only)
+    assert sch.partition(cfg, 3, ranges=((0, 3), (3, 3), (3, 6)))[1] == (3, 3)
+
+
+def test_partition_degenerate_fewer_layers_than_stages():
+    """n < n_vs: one layer per early stage, empty tails (legacy rule used
+    by the smoke-scale reference-executor tests)."""
+    part = sch.partition(_part_cfg(2), 4)
+    assert part == ((0, 1), (1, 2), (2, 2), (2, 2))
+
+
+def test_moe_layer_cost_counts_active_experts_only():
+    """layer_cost must charge top_k expert FFNs, not all E of them — else
+    MoE-heavy stages would be wildly over-weighted."""
+    from repro.configs import get_config
+    cfg = get_config("olmoe-1b-7b")          # 64 experts, top_k 8
+    moe_c = sch.layer_cost(cfg.layers[0], cfg)
+    full = cfg.moe.num_experts * 3 * cfg.d_model * cfg.moe.d_ff
+    assert moe_c < full / 4

@@ -259,3 +259,78 @@ def test_lr_schedule_monotone_warmup(steps):
     warm = lrs[: min(steps, 10)]
     assert all(b >= a - 1e-9 for a, b in zip(warm, warm[1:]))
     assert all(l <= oc.lr + 1e-9 for l in lrs)
+
+
+def test_tiny_preserves_moe_routing():
+    """ModelConfig.tiny() shrinks widths but must NOT touch the routing
+    problem: num_experts / top_k survive so capacity buckets, drops, and
+    expert-parallel divisibility match the full model (reduced() caps
+    experts at 4, which breaks ep > 4 and changes drop patterns)."""
+    from repro.configs import get_config
+    cfg = get_config("olmoe-1b-7b")
+    t = cfg.tiny()
+    assert t.moe is not None
+    assert t.moe.num_experts == cfg.moe.num_experts
+    assert t.moe.top_k == cfg.moe.top_k
+    assert t.d_model < cfg.d_model and t.n_layers <= 2
+    assert t.frontend == cfg.frontend
+    # dense configs: no phantom moe appears
+    assert get_config("qwen3-4b").tiny().moe is None
+
+
+def test_moe_fbw_tp2_matches_grad():
+    """units.moe_fwd/moe_bwd_act under a real 2-way TP shard_map group
+    (expert weights sharded on their f dim, psum over 'model') must equal
+    the single-device jax.grad oracle."""
+    import subprocess, sys, textwrap
+    from pathlib import Path
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.models import model as M, units
+        from repro.pipeline.spmd import tp_specs
+        from repro.tp.context import TPContext
+
+        cfg = get_config("olmoe-1b-7b").reduced(n_layers=1, d_model=64,
+                                                n_heads=4, vocab=128)
+        spec = cfg.layers[0]
+        key = jax.random.PRNGKey(3)
+        params = M.init_layer(key, spec, cfg, 0.02)["mlp"]
+        x = jax.random.normal(key, (2, 16, 64))
+        res = jax.random.normal(jax.random.PRNGKey(4), (2, 16, 64))
+
+        def loss(p, xx):
+            y, _ = units.moe_fwd(p, TPContext(), xx, res, spec, cfg)
+            return (y.astype(jnp.float32) ** 2).sum()
+
+        gx_ref = jax.grad(loss, argnums=1)(params, x)
+        y_ref, _ = units.moe_fwd(params, TPContext(), x, res, spec, cfg)
+
+        mesh = Mesh(np.array(jax.devices()), ("model",))
+        tp = TPContext(axis="model", size=2)
+        pspec = tp_specs(params, "model", None)
+
+        def f(p, xx):
+            y, ctx = units.moe_fwd(p, tp, xx, res, spec, cfg)
+            gx, gres, wt, j = units.moe_bwd_act(p, tp, ctx, 2 * y, spec,
+                                                cfg)
+            return y, gx
+
+        y, gx = shard_map(f, mesh=mesh, in_specs=(pspec, P()),
+                          out_specs=(P(), P()), check_rep=False)(params, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=2e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                                   atol=2e-4, rtol=1e-3)
+        print("OK")
+    """)
+    repo = Path(__file__).resolve().parent.parent
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env={"PYTHONPATH": str(repo / "src"),
+                                       "PATH": "/usr/bin:/bin"},
+                       timeout=600)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stdout + r.stderr
