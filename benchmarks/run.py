@@ -46,6 +46,19 @@ def _table3():
                    check=True, env=env)
 
 
+def _fig10():
+    # subprocess: measured mode times naive-vs-offloaded SpmdRunner
+    # programs on a pp=2 fake mesh, so the device count must be fixed
+    # before jax initializes
+    import os
+    import subprocess
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               JAX_PLATFORMS="cpu")
+    subprocess.run([sys.executable, "-m", "benchmarks.fig10_offload"],
+                   check=True, env=env)
+
+
 def _serve():
     # subprocess for the same reason; bench_serve pins its own XLA_FLAGS
     import os
@@ -63,7 +76,8 @@ ALL = {
     "table3": _table3,
     "table3_sim": table3_mllm.main_sim,
     "fig9": fig9_memory.main,
-    "fig10": fig10_offload.main,
+    "fig10": _fig10,
+    "fig10_sim": fig10_offload.main_sim,
     "appA": appA_warmup.main,
     "table4": table4_mfu.main,
     "roofline": roofline.main,
@@ -74,6 +88,12 @@ ALL = {
 
 def main():
     picks = [a for a in sys.argv[1:] if not a.startswith("-")]
+    unknown = [n for n in picks if n not in ALL]
+    if unknown:
+        print(f"unknown benchmark(s): {', '.join(unknown)}",
+              file=sys.stderr)
+        print(f"available: {', '.join(ALL)}", file=sys.stderr)
+        sys.exit(1)
     names = picks or list(ALL)
     for name in names:
         t0 = time.time()

@@ -57,7 +57,13 @@ def save_checkpoint(directory, tree, *, step: int = 0, extra: dict = None,
 
 def load_checkpoint(directory, like_tree):
     """Restore into the structure of ``like_tree`` (leaf order must match
-    the saved order, which path-keying makes stable)."""
+    the saved order, which path-keying makes stable).
+
+    Raises ``ValueError`` — never a stripped-under-``-O`` assert or a bare
+    ``KeyError`` — when the checkpoint does not match ``like_tree``: leaf
+    count mismatch, a leaf name missing from the shards (truncated or
+    foreign checkpoint), or a stored dtype/shape that differs from the
+    target leaf (silent ``astype`` coercion would mask corruption)."""
     d = Path(directory)
     meta = json.loads((d / "meta.json").read_text())
     store = {}
@@ -65,10 +71,28 @@ def load_checkpoint(directory, like_tree):
         with np.load(f) as z:
             store.update({k: z[k] for k in z.files})
     flat, treedef = jax.tree_util.tree_flatten(like_tree)
-    assert len(flat) == meta["n_leaves"], \
-        f"leaf count mismatch: {len(flat)} vs {meta['n_leaves']}"
-    leaves = [store[n] for n in meta["names"]]
-    out = [np.asarray(v).astype(l.dtype).reshape(l.shape)
-           for v, l in zip(leaves, flat)]
+    if len(flat) != meta["n_leaves"]:
+        raise ValueError(
+            f"checkpoint {d}: leaf count mismatch — target tree has "
+            f"{len(flat)} leaves, meta.json records {meta['n_leaves']}")
+    missing = [n for n in meta["names"] if n not in store]
+    if missing:
+        raise ValueError(
+            f"checkpoint {d}: {len(missing)} leaves named in meta.json are "
+            f"absent from the shard files (truncated or foreign "
+            f"checkpoint); first missing: {missing[0]!r}")
+    out = []
+    for n, l in zip(meta["names"], flat):
+        v = np.asarray(store[n])
+        want = np.dtype(l.dtype)
+        if v.dtype != want:
+            raise ValueError(
+                f"checkpoint {d}: dtype mismatch at leaf {n!r} — stored "
+                f"{v.dtype}, target expects {want}")
+        if v.shape != tuple(l.shape):
+            raise ValueError(
+                f"checkpoint {d}: shape mismatch at leaf {n!r} — stored "
+                f"{v.shape}, target expects {tuple(l.shape)}")
+        out.append(v)
     return jax.tree_util.tree_unflatten(treedef, out), meta["step"], \
         meta["extra"]

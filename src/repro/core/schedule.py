@@ -179,10 +179,20 @@ def partition(cfg, n_vs: int, *, ranges=None, vit_factor: float = 1.0,
     return tuple(bounds)
 
 
-def memory_bound(kind: str, p: int, m: int) -> float:
+def memory_bound(kind: str, p: int, m: int,
+                 offload_alpha: float = 0.0) -> float:
     """Per-device peak in-flight activation bound, in per-virtual-stage
     activation units (Table 1, +1 transient slack for the braided/1F1B F
-    that executes before its paired B releases)."""
+    that executes before its paired B releases).
+
+    With ``offload_alpha`` > 0 the bound is offload-aware (§4.4): tables
+    annotated by ``simulator.annotate_offload`` hold only ``(1-α)·m_a``
+    between an activation's OFFLOAD and FETCH, so at the peak a guaranteed
+    per-kind number of chunk-0 activations is α-offloaded — all resident
+    microbatches but the newest for the flat kinds, the warm-up depth's
+    worth for the v=2 kinds (chunk-1 activations stay resident).  The
+    per-kind counts are pinned against the verifier's exact replay across a
+    (p, m) sweep in the test suite."""
     bounds = {
         "gpipe": float(m),            # all microbatches resident
         "1f1b": float(p),             # warm-up depth
@@ -191,7 +201,15 @@ def memory_bound(kind: str, p: int, m: int) -> float:
         "stp": float(3 * p),          # paper §4.3
         "stp-memeff": float(2 * p),   # App. A/B variant (d)
     }
-    return bounds[kind] + 1.0
+    offload_units = {
+        "gpipe": float(m - 1),
+        "1f1b": float(min(p, m) - 1),
+        "1f1b-i": float(p),
+        "zb-v": float(min(p, m)),
+        "stp": float(min(p, m)),
+        "stp-memeff": float(min(p, m)),
+    }
+    return bounds[kind] + 1.0 - offload_alpha * offload_units[kind]
 
 
 # ---------------------------------------------------------------------------

@@ -144,6 +144,59 @@ class Instr:
             yield ("W", *self.w)
 
 
+@dataclass(frozen=True)
+class OffloadOp:
+    """Explicit activation-buffer lifetime op in a schedule table (§4.4).
+
+    ``OFFLOAD`` moves fraction α of the (vs, mb) activation to host right
+    after its F; ``FETCH`` brings it back ahead of its B.  Between the two,
+    the device holds only ``(1-α)·m_a`` of that activation.  These ops carry
+    no timing of their own — :func:`simulate` models the cost through its
+    ``offload_alpha`` / ``offload_overhead`` parameters and strips them —
+    but :func:`verify_tables` replays them as part of the IR safety
+    contract, and the SPMD executor lowers them to real host transfers.
+    """
+    op: Literal["OFFLOAD", "FETCH"]
+    vs: int
+    mb: int
+
+
+def annotate_offload(tables, pl: "Placement"):
+    """Derive the §4.4 activation-offload lifetime ops from a schedule
+    table: an ``OFFLOAD(vs, mb)`` immediately after each instruction whose
+    F-part targets a *chunk-0* virtual stage, and a ``FETCH(vs, mb)``
+    immediately before the instruction whose B-part consumes it.  Chunk-1
+    activations are short-lived and stay resident (the paper's PCIe-
+    contention rule).  This changes no dispatch policy — the per-device
+    instruction order is exactly the input table's.
+
+    Self-braided instructions (F and B of the same (vs, mb) in one block)
+    create and free the activation within the instruction, so they get no
+    lifetime ops."""
+    out = []
+    for tab in tables:
+        ops: list = []
+        for ins in tab:
+            if isinstance(ins, OffloadOp):
+                raise ValueError("table already carries offload ops")
+            if (ins.b is not None and pl.chunk(ins.b[0]) == 0
+                    and ins.b != ins.f):
+                ops.append(OffloadOp("FETCH", *ins.b))
+            ops.append(ins)
+            if (ins.f is not None and pl.chunk(ins.f[0]) == 0
+                    and ins.f != ins.b):
+                ops.append(OffloadOp("OFFLOAD", *ins.f))
+        out.append(ops)
+    return out
+
+
+def strip_offload(tables):
+    """Drop :class:`OffloadOp` entries, leaving the pure instruction table
+    (what :func:`simulate` and the slot lowering consume)."""
+    return [[ins for ins in tab if not isinstance(ins, OffloadOp)]
+            for tab in tables]
+
+
 def instr_dep_keys(instr: Instr, n_vs: int):
     """Cross-instruction dependencies of one instruction — the single
     source of the IR dataflow rule, shared by the static verifier and the
@@ -291,7 +344,12 @@ def simulate(schedule: Sequence[Sequence[Instr]], pl: Placement,
     (chunk-1 activations have short lifespans and are skipped to avoid PCIe
     contention), so an F of a chunk-0 virtual stage only holds (1-α)·M_a.
     The paper constrains the offload time below T_F, so the throughput cost
-    is a small per-F ``offload_overhead`` (CPU-side, default 0)."""
+    is a small per-F ``offload_overhead`` (CPU-side, default 0).
+
+    Tables annotated with :class:`OffloadOp` lifetime ops are accepted; the
+    ops are stripped up front (they carry no timing — the α/overhead
+    parameters above are the timing model)."""
+    schedule = strip_offload(schedule)
     n_dev = pl.p
     free = np.zeros(n_dev)
     ptr = [0] * n_dev
@@ -359,7 +417,8 @@ class ScheduleVerificationError(AssertionError):
 
 def verify_tables(schedule: Sequence[Sequence[Instr]], pl: Placement, m: int,
                   *, mem_bound: Optional[float] = None,
-                  m_a: Optional[np.ndarray] = None) -> np.ndarray:
+                  m_a: Optional[np.ndarray] = None,
+                  offload_alpha: float = 0.0) -> np.ndarray:
     """Statically verify a per-device instruction table as an IR program.
 
     Checks, without any timing model (pure dependency replay):
@@ -373,6 +432,15 @@ def verify_tables(schedule: Sequence[Sequence[Instr]], pl: Placement, m: int,
       * memory safety — no double-free: a B releases its activation exactly
         once and a W consumes its tape exactly once (``BW``-style fused
         instructions consume inline); nothing is left allocated at the end;
+      * offload lifetimes — tables may carry :class:`OffloadOp` entries (see
+        :func:`annotate_offload`): an ``OFFLOAD`` needs its F done and a
+        live, not-already-offloaded activation (no double-offload); a
+        ``FETCH`` needs the activation offloaded (no fetch-before-offload /
+        double-fetch); a B must not consume a still-offloaded activation
+        (a missing FETCH is an offload leak), and nothing may remain
+        offloaded at end of schedule.  Between OFFLOAD and FETCH the device
+        holds only ``(1-offload_alpha)·m_a`` of the activation, so the
+        ``mem_bound`` check is offload-aware;
       * memory bound — per-device peak in-flight activation memory (in
         ``m_a`` units, default 1 per virtual stage) stays <= ``mem_bound``.
 
@@ -384,6 +452,8 @@ def verify_tables(schedule: Sequence[Sequence[Instr]], pl: Placement, m: int,
     seen: dict = {}
     for d, tab in enumerate(schedule):
         for i, ins in enumerate(tab):
+            if isinstance(ins, OffloadOp):
+                continue
             for ph, vs, mb in ins.components():
                 key = (ph, vs, mb)
                 if key in seen:
@@ -408,6 +478,8 @@ def verify_tables(schedule: Sequence[Sequence[Instr]], pl: Placement, m: int,
     done: set = set()            # (phase, vs, mb) replayed
     tapes: set = set()           # (vs, mb) with a live weight tape
     acts: set = set()            # (vs, mb) with a live activation
+    offloaded: set = set()       # (vs, mb) with the α-slice on host
+    alpha = float(offload_alpha)
     mem = np.zeros(n_dev)
     peak = np.zeros(n_dev)
     ptr = [0] * n_dev
@@ -422,6 +494,38 @@ def verify_tables(schedule: Sequence[Sequence[Instr]], pl: Placement, m: int,
             if ptr[d] >= len(schedule[d]):
                 continue
             ins = schedule[d][ptr[d]]
+            if isinstance(ins, OffloadOp):
+                vs, mb = ins.vs, ins.mb
+                if not (0 <= vs < n_vs and 0 <= mb < m):
+                    raise ScheduleVerificationError(
+                        f"out-of-range {ins.op}({vs},{mb})")
+                if pl.device(vs) != d:
+                    raise ScheduleVerificationError(
+                        f"{ins.op}({vs},{mb}) scheduled on device {d}, "
+                        f"owner is {pl.device(vs)}")
+                if ins.op == "OFFLOAD":
+                    if ("F", vs, mb) not in done or (vs, mb) not in acts:
+                        raise ScheduleVerificationError(
+                            f"OFFLOAD({vs},{mb}) without a live activation "
+                            "(its F has not run, or its B already freed it)")
+                    if (vs, mb) in offloaded:
+                        raise ScheduleVerificationError(
+                            f"double-offload of activation ({vs},{mb})")
+                    offloaded.add((vs, mb))
+                    mem[d] -= alpha * m_a[vs]
+                else:
+                    if (vs, mb) not in offloaded:
+                        raise ScheduleVerificationError(
+                            f"FETCH({vs},{mb}) of an activation not "
+                            "offloaded (fetch-before-offload or "
+                            "double-fetch)")
+                    offloaded.discard((vs, mb))
+                    mem[d] += alpha * m_a[vs]
+                    peak[d] = max(peak[d], mem[d])
+                ptr[d] += 1
+                remaining -= 1
+                progressed = True
+                continue
             if not deps_ok(ins):
                 continue
             if ins.f is not None:
@@ -435,6 +539,10 @@ def verify_tables(schedule: Sequence[Sequence[Instr]], pl: Placement, m: int,
                 if (vs, mb) not in acts:
                     raise ScheduleVerificationError(
                         f"double-free: B({vs},{mb}) has no live activation")
+                if (vs, mb) in offloaded:
+                    raise ScheduleVerificationError(
+                        f"offload leak: B({vs},{mb}) consumes an activation "
+                        "whose α-slice is still on host (missing FETCH)")
                 acts.discard((vs, mb))
                 mem[d] -= m_a[vs]
                 done.add(("B", vs, mb))
@@ -457,6 +565,10 @@ def verify_tables(schedule: Sequence[Sequence[Instr]], pl: Placement, m: int,
         raise ScheduleVerificationError(
             f"leak at end of schedule: live tapes {sorted(tapes)[:8]}, "
             f"live activations {sorted(acts)[:8]}")
+    if offloaded:
+        raise ScheduleVerificationError(
+            "offload leak at end of schedule: still on host "
+            f"{sorted(offloaded)[:8]}")
     if mem_bound is not None and peak.max() > mem_bound + 1e-9:
         raise ScheduleVerificationError(
             f"peak in-flight activation memory {peak.max():.2f} exceeds "

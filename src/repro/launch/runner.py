@@ -30,15 +30,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.schedule import (build as build_schedule, memory_bound,
                                  partition)
-from repro.core.simulator import verify_tables
+from repro.core.simulator import annotate_offload, verify_tables
 from repro.data import DataConfig, microbatches
 from repro.launch.state import Layout, TrainState, decay_mask
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.optim import OptConfig, adamw_update
 from repro.pipeline.reference import pipeline_grads
-from repro.pipeline.spmd import (build_pipeline_train_step, stack_stage_params,
-                                 stage_param_specs)
+from repro.pipeline.spmd import (activation_buffer_stats,
+                                 build_pipeline_train_step,
+                                 stack_stage_params, stage_param_specs)
 
 
 class Runner(Protocol):
@@ -120,8 +121,12 @@ class SpmdRunner:
     def __init__(self, cfg: ModelConfig, oc: OptConfig, kind: str, p: int,
                  m: int, mb_shape, *, tp: int = 1, ep: int = 1,
                  mesh: Optional[Mesh] = None, fuse_slots: bool = True,
-                 braid_tp: bool = False, part=None, vit_factor: float = 1.0):
+                 braid_tp: bool = False, part=None, vit_factor: float = 1.0,
+                 offload_alpha: float = 0.0):
         self.cfg, self.oc, self.m = cfg, oc, m
+        self.offload_alpha = alpha = float(offload_alpha)
+        if not 0.0 <= alpha < 1.0:
+            raise ValueError(f"offload_alpha must be in [0, 1), got {alpha}")
         if ep > 1:
             if cfg.moe is None:
                 raise ValueError(f"ep={ep} needs a MoE config")
@@ -143,7 +148,15 @@ class SpmdRunner:
                             ("stage", "model"))
         self.mesh = mesh
         tables, pl = build_schedule(kind, p, m)
-        verify_tables(tables, pl, m, mem_bound=memory_bound(kind, p, m))
+        if alpha > 0.0:
+            # Statically check the offload-annotated lifetimes (and the
+            # offload-aware memory bound) of the table the executor lowers.
+            verify_tables(annotate_offload(tables, pl), pl, m,
+                          mem_bound=memory_bound(kind, p, m,
+                                                 offload_alpha=alpha),
+                          offload_alpha=alpha)
+        else:
+            verify_tables(tables, pl, m, mem_bound=memory_bound(kind, p, m))
         self.pl = pl
         bounds = partition(cfg, pl.n_vs, ranges=part, vit_factor=vit_factor)
         self.part = bounds
@@ -155,7 +168,8 @@ class SpmdRunner:
         self.describe = (f"spmd {kind} {pl.kind} p={p}"
                          + (f" ep={ep}" if ep > 1 else "")
                          + f" tp={tp} m={m}"
-                         + (" braid" if braid_tp else "") + ptag)
+                         + (" braid" if braid_tp else "")
+                         + (f" off={alpha:g}" if alpha > 0 else "") + ptag)
         model_axis = "model" if tp > 1 else None
         expert_axis = "expert" if ep > 1 else None
 
@@ -166,10 +180,14 @@ class SpmdRunner:
             return c0, c1, prm["embed"], prm["head"]
 
         trees = jax.eval_shape(sds, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        self.act_stats = activation_buffer_stats(
+            cfg, pl, m, mb_shape, trees, tp_size=tp, ep_size=ep, part=bounds,
+            offload_alpha=alpha)
         self._step = build_pipeline_train_step(
             cfg, tables, pl, mesh, m, mb_shape, trees, oc,
             model_axis=model_axis, expert_axis=expert_axis,
-            fuse_slots=fuse_slots, braid_tp=braid_tp, part=bounds)
+            fuse_slots=fuse_slots, braid_tp=braid_tp, part=bounds,
+            offload_alpha=alpha)
         pspec = stage_param_specs(trees, model_axis=model_axis,
                                   expert_axis=expert_axis)
         self._shardings = {
@@ -205,7 +223,8 @@ def make_runner(runtime: str, cfg: ModelConfig, oc: OptConfig,
                 dc: DataConfig, *, schedule: str = "stp", pp: int = 2,
                 tp: int = 1, ep: int = 1, mesh: Optional[Mesh] = None,
                 fuse_slots: bool = True, braid_tp: bool = False,
-                part=None, vit_factor: float = 1.0) -> Runner:
+                part=None, vit_factor: float = 1.0,
+                offload_alpha: float = 0.0) -> Runner:
     """Factory over the three runtimes ('pjit' | 'pipeline' | 'spmd').
 
     ``fuse_slots`` (spmd only) selects the segment-fused slot lowering
@@ -220,6 +239,10 @@ def make_runner(runtime: str, cfg: ModelConfig, oc: OptConfig,
     ``ep`` (spmd only) shards MoE experts over an ``expert`` mesh axis
     between ``stage`` and ``model``; routing stays replicated, so training
     matches ``ep=1`` exactly.
+    ``offload_alpha`` (spmd only) enables §4.4 activation offload: the
+    fraction α of every chunk-0 activation context lives in host memory
+    between its F and a double-buffered FETCH one slot ahead of its B
+    (α=0 traces exactly the baseline program).
     """
     if runtime == "pjit":
         return PjitRunner(cfg, oc)
@@ -228,7 +251,8 @@ def make_runner(runtime: str, cfg: ModelConfig, oc: OptConfig,
         return SpmdRunner(cfg, oc, schedule, pp, dc.microbatches,
                           (mb, dc.seq_len), tp=tp, ep=ep, mesh=mesh,
                           fuse_slots=fuse_slots, braid_tp=braid_tp,
-                          part=part, vit_factor=vit_factor)
+                          part=part, vit_factor=vit_factor,
+                          offload_alpha=offload_alpha)
     if runtime == "pipeline":
         return ReferenceRunner(cfg, oc, schedule, pp, dc.microbatches,
                                part=part, vit_factor=vit_factor)

@@ -74,6 +74,10 @@ def main():
     ap.add_argument("--braid-tp", action="store_true",
                     help="spmd only: run composite F&B slots through the "
                          "braided overlap-aware chunk executor")
+    ap.add_argument("--offload-alpha", type=float, default=0.0,
+                    help="spmd only: §4.4 activation offload — fraction of "
+                         "each chunk-0 activation context held in host "
+                         "memory between its F and B (0 disables)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -96,7 +100,8 @@ def main():
     runner = make_runner(args.runtime, cfg, oc, dc, schedule=args.schedule,
                          pp=args.pp, tp=args.tp, ep=args.ep,
                          braid_tp=args.braid_tp, part=part,
-                         vit_factor=args.vit_factor)
+                         vit_factor=args.vit_factor,
+                         offload_alpha=args.offload_alpha)
     start = 0
     if args.ckpt and Path(args.ckpt, "meta.json").exists():
         params, opt, start, _ = load_canonical(args.ckpt, cfg)

@@ -29,7 +29,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.simulator import Instr, Placement, instr_dep_keys
+from repro.core.simulator import Instr, OffloadOp, Placement, instr_dep_keys
 
 # Branch-role vocabularies per placement kind.  Index in the tuple == the
 # int32 code emitted by ``encode`` == the ``lax.switch`` arm the executor
@@ -339,6 +339,68 @@ def recv_rows(codes: np.ndarray, seg: Segment, kind: str, m: int
                 arr[:, d, i] = mbc[:, src, mcol]
         out.append(arr)
     return tuple(out)
+
+
+def offload_plan(ops_tables, grid, pl: Placement, m: int) -> np.ndarray:
+    """Static per-slot fetch/read plan for the executor's §4.4 activation
+    offload, derived from an :func:`repro.core.simulator.annotate_offload`'d
+    table and the pure table's slot ``grid``.
+
+    -> int32 array of shape (n_slots, p, 3):
+
+      ``[:, :, 0]``  microbatch whose offloaded α-slice to FETCH at the
+                     *end* of this slot's body (``m`` = no fetch),
+      ``[:, :, 1]``  staging row (0/1) that fetch writes,
+      ``[:, :, 2]``  staging row this slot's chunk-0 B (if any) reads.
+
+    Double-buffering invariant: the annotated stream puts FETCH(vs, mb)
+    immediately before the instruction carrying B(vs, mb), so the fetch is
+    planned one slot ahead of its B — at the end of slot ``t_B - 1``'s body,
+    i.e. before the B of the *previous* offloaded microbatch when Bs run
+    back-to-back.  Fetch event *i* writes staging row ``i % 2``; per-device
+    B slots strictly increase, so event *i+2*'s fetch (at slot
+    ``t_B[i+2] - 1 >= t_B[i] + 1``) always lands after event *i*'s read —
+    a staging row is never clobbered before it is consumed."""
+    p = pl.p
+    n_slots = len(grid[0])
+    plan = np.zeros((n_slots, p, 3), np.int32)
+    plan[:, :, 0] = m
+    for d in range(p):
+        islots = [t for t, ins in enumerate(grid[d]) if ins is not None]
+        k = 0
+        f_slot: dict = {}
+        events: list = []            # (fetch_slot, b_slot, vs, mb)
+        pending: list = []
+        for op in ops_tables[d]:
+            if isinstance(op, OffloadOp):
+                if op.op == "FETCH":
+                    pending.append((op.vs, op.mb))
+                else:
+                    # OFFLOAD follows the instr carrying the F: the α-slice
+                    # is written to host as part of that slot's dispatch.
+                    f_slot[(op.vs, op.mb)] = islots[k - 1]
+                continue
+            t = islots[k]
+            k += 1
+            for vs, mb in pending:
+                events.append((t - 1, t, vs, mb))
+            pending = []
+        if pending:
+            raise RuntimeError(
+                f"device {d}: trailing FETCH with no consuming instruction")
+        for i, (ft, bt, vs, mb) in enumerate(events):
+            if ft < f_slot[(vs, mb)]:
+                raise RuntimeError(
+                    f"device {d}: FETCH({vs},{mb}) planned at slot {ft} "
+                    f"before its OFFLOAD at slot {f_slot[(vs, mb)]}")
+            if i >= 2 and ft <= events[i - 2][1]:
+                raise RuntimeError(
+                    f"device {d}: staging row {i % 2} would be overwritten "
+                    f"at slot {ft} before its slot-{events[i - 2][1]} read")
+            plan[ft, d, 0] = mb
+            plan[ft, d, 1] = i % 2
+            plan[bt, d, 2] = i % 2
+    return plan
 
 
 def plan_stats(codes: np.ndarray, kind: str, *, fused: bool) -> dict:

@@ -48,7 +48,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.schedule import partition
-from repro.core.simulator import Placement, flat, parallel, vshape
+from repro.core.simulator import (Placement, annotate_offload, flat, parallel,
+                                  vshape)
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.optim.adamw import OptConfig, adamw_leaf, adamw_scalars
@@ -166,6 +167,27 @@ def _zeros_like_tree(tree):
     return jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), tree)
 
 
+def _memory_kind(kind: str):
+    from jax._src.sharding_impls import TransferToMemoryKind
+    return TransferToMemoryKind(kind)
+
+
+@functools.lru_cache(maxsize=1)
+def host_offload_supported() -> bool:
+    """Whether the backend honours ``pinned_host`` memory-space annotations
+    inside jit (checked by a device_put round-trip probe).  When it does
+    not, the offload lowering falls back to plain unannotated buffers — on
+    CPU the default memory space already *is* host memory, so the fallback
+    pool is host-side by construction."""
+    try:
+        y = jax.jit(lambda v: jax.device_put(
+            jax.device_put(v, _memory_kind("pinned_host")),
+            _memory_kind("device")))(jnp.arange(8, dtype=jnp.float32))
+        return bool(np.asarray(jax.block_until_ready(y))[3] == 3.0)
+    except Exception:
+        return False
+
+
 # ---------------------------------------------------------------------------
 # Megatron-style TP sharding rules for the unit-mode (shard_map) params.
 # Column-parallel: qkv / up projections split their output dim; row-parallel:
@@ -258,13 +280,160 @@ def _local_sds(tree, tp_size: int, lead: int, strip: int, ep_size: int = 1):
     return jax.tree_util.tree_map_with_path(one, tree)
 
 
+def _layers(cparams, count):
+    """Unstack a chunk's stacked per-layer params into a per-layer list."""
+    return [jax.tree.map(lambda a: a[i], cparams) for i in range(count)]
+
+
+def _program_shapes(cfg: ModelConfig, pl: Placement, mb_shape, param_trees,
+                    *, tp_size: int = 1, ep_size: int = 1, part=None) -> dict:
+    """Static per-device partition signatures and ctx/tape/head buffer
+    ShapeDtypeStructs — shared by the slot-program lowering and the offload
+    byte accounting (:func:`activation_buffer_stats`).
+
+    Buffer shapes are traced with an identity TPContext over the *local*
+    shard shapes — collectives preserve shapes, so the unit-mode buffers
+    match (eval_shape cannot bind mesh axis names)."""
+    p = pl.p
+    two_chunks = pl.kind != "flat"
+    bounds = (default_part(cfg, p, pl.kind) if part is None
+              else _part_bounds(part, p, pl.kind))
+    rng = {0: [bounds[pl.vs_of(d, 0)] for d in range(p)]}
+    if two_chunks:
+        rng[1] = [bounds[pl.vs_of(d, 1)] for d in range(p)]
+    chunk_ids = sorted(rng)
+    sig_of_dev = [tuple(rng[c][d] for c in chunk_ids) for d in range(p)]
+    sigs = list(dict.fromkeys(sig_of_dev))
+    sig_id = np.array([sigs.index(s) for s in sig_of_dev], np.int32)
+    lmax = {c: max(b - a for a, b in rng[c]) for c in chunk_ids}
+
+    bmb, seq = mb_shape
+    rope = M._rope_for(cfg, seq)
+    x_sds = jax.ShapeDtypeStruct((bmb, seq, cfg.d_model), jnp.float32)
+    lab_sds = jax.ShapeDtypeStruct((bmb, seq), jnp.int32)
+
+    def specs_of(r):
+        return cfg.layers[r[0]:r[1]]
+
+    tp0 = TPContext(expert_size=ep_size)
+    cp_sds = {0: _local_sds(param_trees[0], tp_size, lead=2, strip=1,
+                            ep_size=ep_size)}
+    if two_chunks:
+        cp_sds[1] = _local_sds(param_trees[1], tp_size, lead=2, strip=1,
+                               ep_size=ep_size)
+
+    def _raw_sds(r, c):
+        count = r[1] - r[0]
+        _, cx = jax.eval_shape(
+            lambda cp, x: M.chunk_fwd(_layers(cp, count), tp0, x, rope,
+                                      specs_of(r), cfg), cp_sds[c], x_sds)
+        _, tps, _ = jax.eval_shape(
+            lambda cp, cxs, g: M.chunk_bwd_act(_layers(cp, count), tp0, cxs,
+                                               g, specs_of(r), cfg),
+            cp_sds[c], cx, x_sds)
+        return cx, tps
+
+    def _leaf_sig(tree):
+        return (jax.tree.structure(tree),
+                tuple((l.shape, str(l.dtype)) for l in jax.tree.leaves(tree)))
+
+    # Per-chunk ctx/tape buffers sized to the chunk's deepest stage.  The
+    # structure at stack position l must agree across every stage of the
+    # chunk that owns a layer there — one carry serves all devices.
+    ctx_sds, tape_sds = {}, {}
+    for c in chunk_ids:
+        per_rng = {r: _raw_sds(r, c) for r in dict.fromkeys(rng[c])}
+        buf_ctx, buf_tape = [], []
+        for l in range(lmax[c]):
+            owners = [r for r in per_rng if r[1] - r[0] > l]
+            ref = per_rng[owners[0]]
+            for r in owners[1:]:
+                got = per_rng[r]
+                if (_leaf_sig(ref[0][l]) != _leaf_sig(got[0][l])
+                        or _leaf_sig(ref[1][l]) != _leaf_sig(got[1][l])):
+                    raise ValueError(
+                        f"heterogeneous layer kinds at stack position {l} "
+                        f"of chunk {c} (ranges {owners[0]} vs {r}): stages "
+                        "sharing a chunk stack must align structurally — "
+                        "pass explicit partition ranges that align layer "
+                        "kinds, or run through pipeline.reference")
+            buf_ctx.append(ref[0][l])
+            buf_tape.append(ref[1][l])
+        ctx_sds[c] = buf_ctx
+        tape_sds[c] = buf_tape
+
+    head_sds = _local_sds(param_trees[3], tp_size, lead=0, strip=0)
+    _, hctx_sds = jax.eval_shape(
+        lambda hp, x, lab: M.head_fwd(hp, tp0, x, lab, cfg),
+        head_sds, x_sds, lab_sds)
+    _, htape_sds, _ = jax.eval_shape(
+        lambda hp, c: M.head_bwd_act(hp, tp0, c, jnp.float32(1.0), cfg),
+        head_sds, hctx_sds)
+    return dict(two_chunks=two_chunks, bounds=bounds, rng=rng,
+                chunk_ids=chunk_ids, sigs=sigs, sig_id=sig_id, lmax=lmax,
+                rope=rope, x_sds=x_sds, lab_sds=lab_sds,
+                ctx_sds=ctx_sds, tape_sds=tape_sds,
+                hctx_sds=hctx_sds, htape_sds=htape_sds)
+
+
+def _off_k(shape, alpha: float) -> int:
+    """Offloaded element count of one flattened ctx leaf: ``int(α·size)``."""
+    return int(alpha * int(np.prod(shape)))
+
+
+def activation_buffer_stats(cfg: ModelConfig, pl: Placement, m: int,
+                            mb_shape, param_trees, *, tp_size: int = 1,
+                            ep_size: int = 1, part=None,
+                            offload_alpha: float = 0.0) -> dict:
+    """Static byte accounting of the executor's per-device activation
+    carries, split device-resident vs host-offloaded.
+
+    The headline ``device_act_bytes`` counts the F→B context buffers
+    (chunk-0 resident slices + the two offload staging rows + chunk-1 +
+    loss-head contexts) — exactly the state §4.4's α shrinks.  The B→W
+    tapes and the (m+1)-row boundary stream buffers are reported separately
+    for transparency (offload does not touch them)."""
+    alpha = float(offload_alpha)
+    sh = _program_shapes(cfg, pl, mb_shape, param_trees, tp_size=tp_size,
+                         ep_size=ep_size, part=part)
+
+    def nbytes(tree):
+        return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                   for s in jax.tree.leaves(tree))
+
+    ctx0_row = nbytes(sh["ctx_sds"][0])
+    off_row = sum(_off_k(s.shape, alpha) * s.dtype.itemsize
+                  for s in jax.tree.leaves(sh["ctx_sds"][0]))
+    ctx1_row = nbytes(sh["ctx_sds"][1]) if sh["two_chunks"] else 0
+    hctx_row = nbytes(sh["hctx_sds"])
+    tape_rows = (nbytes(sh["tape_sds"][0]) + nbytes(sh["htape_sds"])
+                 + (nbytes(sh["tape_sds"][1]) if sh["two_chunks"] else 0))
+    bmb, seq = mb_shape
+    n_streams = 2 if pl.kind == "flat" else 4
+    boundary = n_streams * (m + 1) * bmb * seq * cfg.d_model * 4
+    device_act = (m * (ctx0_row - off_row) + 2 * off_row
+                  + m * (ctx1_row + hctx_row))
+    return {
+        "offload_alpha": alpha,
+        "m": m,
+        "ctx0_row_bytes": ctx0_row,
+        "ctx0_offloaded_row_bytes": off_row,
+        "device_act_bytes": device_act,
+        "host_act_bytes": m * off_row,
+        "tape_bytes": m * tape_rows,
+        "boundary_bytes": boundary,
+        "device_total_bytes": device_act + m * tape_rows + boundary,
+    }
+
+
 def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                       m: int, mb_shape, param_trees, *,
                       stage_axis: str = "stage",
                       model_axis: Optional[str] = None,
                       expert_axis: Optional[str] = None,
                       fuse: bool = True, ablate: Optional[str] = None,
-                      braid_tp: bool = False, part=None):
+                      braid_tp: bool = False, part=None,
+                      offload_alpha: float = 0.0):
     """Build the per-device slot program ``run(c0, c1, embed_p, head_p,
     tokens, labels) -> (loss, g0, g1, g_embed, g_head)`` to be wrapped in
     ``shard_map`` — shared by the grads-only step and the fused train step.
@@ -308,6 +477,16 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     run its own static layer counts, so one traced program serves stages of
     different depths (uniform partitions collapse to a single signature and
     trace exactly the old program).
+
+    ``offload_alpha`` > 0 enables the §4.4 activation-offload lowering:
+    each chunk-0 ctx row leaf is flattened and split at ``k = int(α·size)``
+    — the first k elements move to a host-memory ``(m, k)`` buffer when the
+    slot that runs F completes, and are staged back on device one slot
+    ahead of their B (``slots.offload_plan``, double-buffered over two
+    staging rows), while the remaining ``size - k`` stay in the scanned
+    device carry.  The split/join is pure reshape + concatenation, so
+    ``offload_alpha = 0.0`` traces byte-for-byte today's program and any
+    α > 0 is bitwise-identical math on re-joined values.
     """
     assert ablate in (None, "exchange", "compute", "both", "tp")
     do_exchange = ablate not in ("exchange", "both")
@@ -316,6 +495,13 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     two_chunks = pl.kind != "flat"
     grid = SL.to_slots(tables, pl)
     codes_np = SL.encode(grid, pl)                      # (L, p, 6) static
+    off_alpha = float(offload_alpha)
+    off_on = off_alpha > 0.0
+    if off_on and ablate is not None:
+        raise ValueError("offload_alpha composes with the real program only "
+                         "(ablate variants are benchmark-only stubs)")
+    off_plan_np = (SL.offload_plan(annotate_offload(tables, pl), grid, pl, m)
+                   if off_on else None)
     wiring = SL.WIRING[pl.kind]
     act_streams = tuple(s for s in ("x0", "x1")
                         if s in wiring["up"] + wiring["dn"])
@@ -334,91 +520,47 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     # collectives) while `tp` keeps the real size for shard shapes.
     tp_exec = TPContext() if ablate == "tp" else tp
 
-    # --- partition signatures -------------------------------------------
-    bounds = (default_part(cfg, p, pl.kind) if part is None
-              else _part_bounds(part, p, pl.kind))
-    rng = {0: [bounds[pl.vs_of(d, 0)] for d in range(p)]}
-    if two_chunks:
-        rng[1] = [bounds[pl.vs_of(d, 1)] for d in range(p)]
-    chunk_ids = sorted(rng)
-    sig_of_dev = [tuple(rng[c][d] for c in chunk_ids) for d in range(p)]
-    sigs = list(dict.fromkeys(sig_of_dev))
-    sig_id = np.array([sigs.index(s) for s in sig_of_dev], np.int32)
-    lmax = {c: max(b - a for a, b in rng[c]) for c in chunk_ids}
+    sh = _program_shapes(cfg, pl, mb_shape, param_trees, tp_size=tp.size,
+                         ep_size=ep_size, part=part)
+    chunk_ids, sigs = sh["chunk_ids"], sh["sigs"]
+    sig_id, rope = sh["sig_id"], sh["rope"]
+    ctx_sds, tape_sds = sh["ctx_sds"], sh["tape_sds"]
+    hctx_sds, htape_sds = sh["hctx_sds"], sh["htape_sds"]
 
     bmb, seq = mb_shape
     d_model = cfg.d_model
     scale = 1.0 / m
-    rope = M._rope_for(cfg, seq)
 
     def specs_of(r):
         return cfg.layers[r[0]:r[1]]
 
-    def _layers(cparams, count):
-        return [jax.tree.map(lambda a: a[i], cparams)
-                for i in range(count)]
+    # --- §4.4 offload: resident/offloaded split of chunk-0 ctx rows ------
+    if off_on:
+        to_host, to_dev = (
+            ((lambda t: jax.device_put(t, _memory_kind("pinned_host"))),
+             (lambda t: jax.device_put(t, _memory_kind("device"))))
+            if host_offload_supported()
+            else ((lambda t: t), (lambda t: t)))
+        ctx0_res_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (int(np.prod(s.shape)) - _off_k(s.shape, off_alpha),),
+                s.dtype), ctx_sds[0])
+        ctx0_off_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((_off_k(s.shape, off_alpha),),
+                                           s.dtype), ctx_sds[0])
 
-    # --- trace shapes for context/tape buffers --------------------------
-    x_sds = jax.ShapeDtypeStruct((bmb, seq, d_model), jnp.float32)
-    lab_sds = jax.ShapeDtypeStruct((bmb, seq), jnp.int32)
+        def _off_part(ctxs):
+            return jax.tree.map(
+                lambda x: x.reshape(-1)[:_off_k(x.shape, off_alpha)], ctxs)
 
-    # Buffer shapes are traced with an identity TPContext over the *local*
-    # shard shapes — collectives preserve shapes, so the unit-mode buffers
-    # match (eval_shape cannot bind mesh axis names).
-    tp0 = TPContext(expert_size=ep_size)
-    cp_sds = {0: _local_sds(param_trees[0], tp.size, lead=2, strip=1,
-                            ep_size=ep_size)}
-    if two_chunks:
-        cp_sds[1] = _local_sds(param_trees[1], tp.size, lead=2, strip=1,
-                               ep_size=ep_size)
+        def _res_part(ctxs):
+            return jax.tree.map(
+                lambda x: x.reshape(-1)[_off_k(x.shape, off_alpha):], ctxs)
 
-    def _raw_sds(r, c):
-        count = r[1] - r[0]
-        _, cx = jax.eval_shape(
-            lambda cp, x: M.chunk_fwd(_layers(cp, count), tp0, x, rope,
-                                      specs_of(r), cfg), cp_sds[c], x_sds)
-        _, tps, _ = jax.eval_shape(
-            lambda cp, cxs, g: M.chunk_bwd_act(_layers(cp, count), tp0, cxs,
-                                               g, specs_of(r), cfg),
-            cp_sds[c], cx, x_sds)
-        return cx, tps
-
-    def _leaf_sig(tree):
-        return (jax.tree.structure(tree),
-                tuple((l.shape, str(l.dtype)) for l in jax.tree.leaves(tree)))
-
-    # Per-chunk ctx/tape buffers sized to the chunk's deepest stage.  The
-    # structure at stack position l must agree across every stage of the
-    # chunk that owns a layer there — one carry serves all devices.
-    ctx_sds, tape_sds = {}, {}
-    for c in chunk_ids:
-        per_rng = {r: _raw_sds(r, c) for r in dict.fromkeys(rng[c])}
-        buf_ctx, buf_tape = [], []
-        for l in range(lmax[c]):
-            owners = [r for r in per_rng if r[1] - r[0] > l]
-            ref = per_rng[owners[0]]
-            for r in owners[1:]:
-                got = per_rng[r]
-                if (_leaf_sig(ref[0][l]) != _leaf_sig(got[0][l])
-                        or _leaf_sig(ref[1][l]) != _leaf_sig(got[1][l])):
-                    raise ValueError(
-                        f"heterogeneous layer kinds at stack position {l} "
-                        f"of chunk {c} (ranges {owners[0]} vs {r}): stages "
-                        "sharing a chunk stack must align structurally — "
-                        "pass explicit partition ranges that align layer "
-                        "kinds, or run through pipeline.reference")
-            buf_ctx.append(ref[0][l])
-            buf_tape.append(ref[1][l])
-        ctx_sds[c] = buf_ctx
-        tape_sds[c] = buf_tape
-
-    head_sds = _local_sds(param_trees[3], tp.size, lead=0, strip=0)
-    _, hctx_sds = jax.eval_shape(
-        lambda hp, x, lab: M.head_fwd(hp, tp0, x, lab, cfg),
-        head_sds, x_sds, lab_sds)
-    _, htape_sds, hjoint_sds = jax.eval_shape(
-        lambda hp, c: M.head_bwd_act(hp, tp0, c, jnp.float32(1.0), cfg),
-        head_sds, hctx_sds)
+        def _join_off(res, off):
+            return jax.tree.map(
+                lambda s, r, o: jnp.concatenate([o, r]).reshape(s.shape),
+                ctx_sds[0], res, off)
 
     def zeros_of(sds_tree, lead=None):
         return jax.tree.map(
@@ -473,7 +615,9 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
         zrow = lambda: jnp.zeros((m + 1, bmb, seq, d_model), jnp.float32)
         carry = {
             "x0": zrow(), "g0": zrow(),
-            "ctx0": zeros_of(ctx_sds[0], m), "tape0": zeros_of(tape_sds[0], m),
+            "ctx0": (zeros_of(ctx0_res_sds, m) if off_on
+                     else zeros_of(ctx_sds[0], m)),
+            "tape0": zeros_of(tape_sds[0], m),
             "hctx": zeros_of(hctx_sds, m), "htape": zeros_of(htape_sds, m),
             "loss": jnp.zeros((m,), jnp.float32),
             "a0": _zeros_like_tree(c0),
@@ -487,6 +631,41 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                 "tape1": zeros_of(tape_sds[1], m),
                 "a1": _zeros_like_tree(c1),
             })
+        if off_on:
+            # (m, k) host pool + two on-device staging rows + the staging
+            # row selector the current slot's chunk-0 B reads through.
+            carry["ctx0_off"] = to_host(zeros_of(ctx0_off_sds, m))
+            carry["ctx0_stage"] = zeros_of(ctx0_off_sds, 2)
+            carry["osel"] = jnp.int32(0)
+
+        def _ctx_write(carry, mb, which, ctxs):
+            if which == 0 and off_on:
+                return dict(
+                    carry,
+                    ctx0=_write(carry["ctx0"], mb, _res_part(ctxs)),
+                    ctx0_off=_write(carry["ctx0_off"], mb,
+                                    to_host(_off_part(ctxs))))
+            ck = "ctx0" if which == 0 else "ctx1"
+            return dict(carry, **{ck: _write(carry[ck], mb, ctxs)})
+
+        def _ctx_read(carry, mb, which):
+            if which == 0 and off_on:
+                return _join_off(_read(carry["ctx0"], mb),
+                                 _read(carry["ctx0_stage"], carry["osel"]))
+            return _read(carry["ctx0" if which == 0 else "ctx1"], mb)
+
+        def _fetch(carry, fmb, frow):
+            """End-of-slot FETCH: stage microbatch ``fmb``'s offloaded
+            α-slice back on device in staging row ``frow``, one slot ahead
+            of its B (``fmb == m`` encodes no-fetch)."""
+            def do(off, stg):
+                row = to_dev(_read(off, jnp.minimum(fmb, m - 1)))
+                return jax.tree.map(
+                    lambda s, n: jax.lax.dynamic_update_index_in_dim(
+                        s, n.astype(s.dtype), frow, 0), stg, row)
+            stg = jax.lax.cond(fmb < m, do, lambda off, s: s,
+                               carry["ctx0_off"], carry["ctx0_stage"])
+            return dict(carry, ctx0_stage=stg)
 
         def add_partial(acc, new, s=scale):
             if isinstance(new, dict):
@@ -548,10 +727,9 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
             chunk_f, chunk_b, _, chunk_w = ops
 
             def _f_chunk(carry, mb, which, src):
-                cp, ck = (c0, "ctx0") if which == 0 else (c1, "ctx1")
+                cp = c0 if which == 0 else c1
                 y, ctxs = chunk_f(which, cp, src)
-                carry = dict(carry, **{ck: _write(carry[ck], mb, ctxs)})
-                return carry, y
+                return _ctx_write(carry, mb, which, ctxs), y
 
             def f0(carry, mb):
                 carry, y = _f_chunk(carry, mb, 0, _read(carry["x0"], mb))
@@ -591,7 +769,7 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
 
             def _b_chunk(carry, mb, which, gy):
                 cp = c0 if which == 0 else c1
-                ctxs = _read(carry["ctx0" if which == 0 else "ctx1"], mb)
+                ctxs = _ctx_read(carry, mb, which)
                 gx, tapes, joints = chunk_b(which, cp, ctxs, gy)
                 ck = "tape0" if which == 0 else "tape1"
                 ak = "a0" if which == 0 else "a1"
@@ -787,20 +965,17 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
             fck, bck = F_CHUNK[fname], B_CHUNK[bname]
             fcp = c0 if fck == 0 else c1
             bcp = c0 if bck == 0 else c1
-            fctx_key = "ctx0" if fck == 0 else "ctx1"
-            bctx_key = "ctx0" if bck == 0 else "ctx1"
             tape_key = "tape0" if bck == 0 else "tape1"
             ak = "a0" if bck == 0 else "a1"
             src = F_SRC[fname]
 
             def fb(carry, fmb, bmb_):
                 x = _embed_x(fmb) if src is None else _read(carry[src], fmb)
-                ctxs_in = _read(carry[bctx_key], bmb_)
+                ctxs_in = _ctx_read(carry, bmb_, bck)
                 carry, gy = _b_gy(bname, carry, bmb_)
                 y, ctxs, gx, tapes, joints = chunk_fb(fck, bck, fcp, x, bcp,
                                                       ctxs_in, gy)
-                carry = dict(carry, **{
-                    fctx_key: _write(carry[fctx_key], fmb, ctxs)})
+                carry = dict(_ctx_write(carry, fmb, fck, ctxs))
                 carry[tape_key] = _write(carry[tape_key], bmb_, tapes)
                 acc = carry[ak]
                 for i, j in enumerate(joints):
@@ -865,29 +1040,41 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
             w_arms, w_tab = _sig_tab(4, w_br)
 
         def generic_slot(carry, xs_t):
-            codes_t, ft, bt, wt = xs_t
+            if off_on:
+                codes_t, ft, bt, wt, off_t = xs_t
+                carry = dict(carry, osel=off_t[me, 2])
+            else:
+                codes_t, ft, bt, wt = xs_t
             my = codes_t[me]
             fmb, bmb_, wmb = my[1], my[3], my[5]
             carry, acts = jax.lax.switch(ft[me], f_arms, carry, fmb)
             carry, grads = jax.lax.switch(bt[me], b_arms, carry, bmb_)
             carry = jax.lax.switch(wt[me], w_arms, carry, wmb)
-            if not do_exchange:
-                return carry, None
-            return _exchange(carry, acts, grads, fmb, bmb_), None
+            if do_exchange:
+                carry = _exchange(carry, acts, grads, fmb, bmb_)
+            if off_on:
+                carry = _fetch(carry, off_t[me, 0], off_t[me, 1])
+            return carry, None
 
         def generic_braid_slot(carry, xs_t):
             """Generic lowering under braid_tp: F and B dispatch through one
             joint switch over the grid's distinct static (F, B, signature)
             triples so composite pairs can lower as a single braided call."""
-            codes_t, pc_t, wt = xs_t
+            if off_on:
+                codes_t, pc_t, wt, off_t = xs_t
+                carry = dict(carry, osel=off_t[me, 2])
+            else:
+                codes_t, pc_t, wt = xs_t
             my = codes_t[me]
             fmb, bmb_, wmb = my[1], my[3], my[5]
             carry, acts, grads = jax.lax.switch(pc_t[me], pair_arms, carry,
                                                 fmb, bmb_)
             carry = jax.lax.switch(wt[me], w_arms, carry, wmb)
-            if not do_exchange:
-                return carry, None
-            return _exchange(carry, acts, grads, fmb, bmb_), None
+            if do_exchange:
+                carry = _exchange(carry, acts, grads, fmb, bmb_)
+            if off_on:
+                carry = _fetch(carry, off_t[me, 0], off_t[me, 1])
+            return carry, None
 
         if braid and not fuse:
             fb_names = SL.F_BRANCHES[pl.kind]
@@ -955,43 +1142,59 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                 row_id.append(jnp.asarray(
                     np.array([distinct.index(r) for r in rows], np.int32)))
 
-            def one_phase(carry, j, mb_t, rr_t):
+            # Offload plan rows for this segment, phase-sliced like mbs;
+            # phases with no fetch in any iteration skip the fetch body
+            # statically (warmup/cooldown phases stay exactly the α=0 code
+            # apart from the scalar staging-row selector update).
+            offs = off_plan_np[seg.start:seg.stop] if off_on else None
+            fetch_ph = ([bool((offs[j::k, :, 0] < m).any())
+                         for j in range(k)] if off_on else [False] * k)
+
+            def one_phase(carry, j, mb_t, rr_t, off_t=None):
                 # mb_t: (p, 3), rr_t: (p, n_live of phase j)
+                if off_on:
+                    carry = dict(carry, osel=off_t[me, 2])
                 my = mb_t[me]
                 if len(arms[j]) == 1:
                     carry, acts, grads = arms[j][0](carry, my)
                 else:
                     carry, acts, grads = jax.lax.switch(
                         row_id[j][me], arms[j], carry, my)
-                if not do_exchange:
-                    return carry
-                vals = dict(zip(act_streams, acts))
-                vals.update(zip(grad_streams, grads))
-                i = 0
-                for names, perm in ((seg.live[j][0], perm_of["up"]),
-                                    (seg.live[j][1], perm_of["dn"])):
-                    for s in names:
-                        rx = jax.lax.ppermute(vals[s], stage_axis, perm)
-                        carry = dict(carry, **{s: _write(carry[s],
-                                                         rr_t[me, i], rx)})
-                        i += 1
+                if do_exchange:
+                    vals = dict(zip(act_streams, acts))
+                    vals.update(zip(grad_streams, grads))
+                    i = 0
+                    for names, perm in ((seg.live[j][0], perm_of["up"]),
+                                        (seg.live[j][1], perm_of["dn"])):
+                        for s in names:
+                            rx = jax.lax.ppermute(vals[s], stage_axis, perm)
+                            carry = dict(carry,
+                                         **{s: _write(carry[s],
+                                                      rr_t[me, i], rx)})
+                            i += 1
+                if fetch_ph[j]:
+                    carry = _fetch(carry, off_t[me, 0], off_t[me, 1])
                 return carry
 
             mbs = codes_np[seg.start:seg.stop, :, 1::2]
             rr = SL.recv_rows(codes_np, seg, pl.kind, m)
             if seg.n_iters == 1:
                 for j in range(k):
-                    carry = one_phase(carry, j, jnp.asarray(mbs[j]),
-                                      jnp.asarray(rr[j][0]))
+                    carry = one_phase(
+                        carry, j, jnp.asarray(mbs[j]), jnp.asarray(rr[j][0]),
+                        jnp.asarray(offs[j]) if off_on else None)
                 return carry
 
             def seg_body(carry, xs):
                 for j in range(k):
-                    carry = one_phase(carry, j, xs[j], xs[k + j])
+                    carry = one_phase(carry, j, xs[j], xs[k + j],
+                                      xs[2 * k + j] if off_on else None)
                 return carry, None
 
             xs = (tuple(jnp.asarray(mbs[j::k]) for j in range(k))
                   + tuple(jnp.asarray(r) for r in rr))
+            if off_on:
+                xs += tuple(jnp.asarray(offs[j::k]) for j in range(k))
             carry, _ = jax.lax.scan(seg_body, carry, xs)
             return carry
 
@@ -999,16 +1202,17 @@ def _pipeline_program(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
             for seg in SL.segment_grid(codes_np, pl.kind):
                 carry = run_segment(carry, seg)
         elif braid:
-            carry, _ = jax.lax.scan(generic_braid_slot, carry,
-                                    (jnp.asarray(codes_np),
-                                     jnp.asarray(pair_codes),
-                                     jnp.asarray(w_tab)))
+            xs = (jnp.asarray(codes_np), jnp.asarray(pair_codes),
+                  jnp.asarray(w_tab))
+            if off_on:
+                xs += (jnp.asarray(off_plan_np),)
+            carry, _ = jax.lax.scan(generic_braid_slot, carry, xs)
         else:
-            carry, _ = jax.lax.scan(generic_slot, carry,
-                                    (jnp.asarray(codes_np),
-                                     jnp.asarray(f_tab),
-                                     jnp.asarray(b_tab),
-                                     jnp.asarray(w_tab)))
+            xs = (jnp.asarray(codes_np), jnp.asarray(f_tab),
+                  jnp.asarray(b_tab), jnp.asarray(w_tab))
+            if off_on:
+                xs += (jnp.asarray(off_plan_np),)
+            carry, _ = jax.lax.scan(generic_slot, carry, xs)
         loss = jax.lax.psum(carry["loss"].sum() * scale, stage_axis)
         g0 = jax.tree.map(lambda a: a[None], carry["a0"])
         g1 = (jax.tree.map(lambda a: a[None], carry["a1"])
@@ -1041,7 +1245,8 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
                         fuse_slots: bool = True,
                         ablate: Optional[str] = None,
                         braid_tp: bool = False,
-                        part=None):
+                        part=None,
+                        offload_alpha: float = 0.0):
     """Returns a jitted SPMD function
     ``step(c0, c1, embed_p, head_p, tokens, labels) -> (loss, g0, g1,
     g_embed, g_head)`` executing the schedule over the ``stage`` (and
@@ -1056,14 +1261,15 @@ def build_pipeline_step(cfg: ModelConfig, tables, pl: Placement, mesh: Mesh,
     ``fuse_slots`` selects the fused segment lowering (default) vs the
     generic one-switch-per-slot scan; ``ablate`` builds the benchmark-only
     cost-breakdown variants; ``braid_tp`` routes composite F&B slots
-    through the braided overlap-aware chunk executor (see
+    through the braided overlap-aware chunk executor; ``offload_alpha``
+    enables the §4.4 activation-offload lowering (see
     ``_pipeline_program``).
     """
     run = _pipeline_program(cfg, tables, pl, mesh, m, mb_shape, param_trees,
                             stage_axis=stage_axis, model_axis=model_axis,
                             expert_axis=expert_axis,
                             fuse=fuse_slots, ablate=ablate, braid_tp=braid_tp,
-                            part=part)
+                            part=part, offload_alpha=offload_alpha)
     rep = P()
     sp = stage_param_specs(param_trees, stage_axis=stage_axis,
                            model_axis=model_axis, expert_axis=expert_axis)
@@ -1119,7 +1325,8 @@ def build_pipeline_train_step(cfg: ModelConfig, tables, pl: Placement,
                               expert_axis: Optional[str] = None,
                               fuse_slots: bool = True,
                               braid_tp: bool = False,
-                              part=None):
+                              part=None,
+                              offload_alpha: float = 0.0):
     """Fused pipeline *train* step: schedule execution, global-norm
     clipping and the AdamW update all under one ``shard_map`` — stacked
     params and optimizer moments never leave the mesh between steps.
@@ -1139,7 +1346,8 @@ def build_pipeline_train_step(cfg: ModelConfig, tables, pl: Placement,
     run = _pipeline_program(cfg, tables, pl, mesh, m, mb_shape, param_trees,
                             stage_axis=stage_axis, model_axis=model_axis,
                             expert_axis=expert_axis,
-                            fuse=fuse_slots, braid_tp=braid_tp, part=part)
+                            fuse=fuse_slots, braid_tp=braid_tp, part=part,
+                            offload_alpha=offload_alpha)
     sp = stage_param_specs(param_trees, stage_axis=stage_axis,
                            model_axis=model_axis, expert_axis=expert_axis)
     ospec = {"mu": sp, "nu": sp, "step": P()}

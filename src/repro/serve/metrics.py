@@ -5,6 +5,13 @@ first_token / finish) and ``tick`` once per engine step; ``summary()``
 reduces that to the numbers the bench reports — decode throughput, TTFT and
 end-to-end latency percentiles, queue depth.  A ``clock`` can be injected
 for deterministic tests.
+
+``reset()`` drops per-request state, but requests admitted *before* a reset
+finish *after* it (``launch.serve`` resets after warmup with requests in
+flight).  Lifecycle edges for such unknown rids are treated as untracked:
+completion/token counters still advance, but no percentile sample is
+recorded (its submit time belongs to the discarded window) and
+``summary()["untracked"]`` counts how many edges were dropped.
 """
 from __future__ import annotations
 
@@ -39,6 +46,7 @@ class ServeMetrics:
         self.max_active = 0
         self.ttft = []        # submit -> first token, seconds
         self.latency = []     # submit -> finish, seconds
+        self.untracked = 0    # lifecycle edges for rids submitted pre-reset
         self._req = {}        # rid -> {"submit"/"admit"/"first": t}
 
     # -- lifecycle edges ----------------------------------------------------
@@ -53,17 +61,30 @@ class ServeMetrics:
 
     def admit(self, rid) -> None:
         self.admitted += 1
-        self._req[rid]["admit"] = self._clock()
+        r = self._req.get(rid)
+        if r is None:
+            self.untracked += 1
+            return
+        r["admit"] = self._clock()
 
     def first_token(self, rid) -> None:
-        r = self._req[rid]
+        r = self._req.get(rid)
+        if r is None:
+            self.untracked += 1
+            return
         r["first"] = self._clock()
         self.ttft.append(r["first"] - r["submit"])
 
     def finish(self, rid, n_gen: int) -> None:
-        r = self._req.pop(rid)
+        # Completion and token-rate counters always advance — the work was
+        # done in this window even if the request was submitted before the
+        # last reset; only the latency sample is skipped.
+        r = self._req.pop(rid, None)
         self.completed += 1
         self.gen_tokens += n_gen
+        if r is None:
+            self.untracked += 1
+            return
         self.latency.append(self._clock() - r["submit"])
 
     def tick(self, queue_depth: int, active: int) -> None:
@@ -90,4 +111,5 @@ class ServeMetrics:
                            "p99": _ms(_pct(self.latency, 99))},
             "max_queue_depth": self.max_queue_depth,
             "max_active": self.max_active,
+            "untracked": self.untracked,
         }

@@ -190,3 +190,36 @@ def test_submit_validation():
     assert too_long.status == "rejected"
     too_many = eng.submit(np.zeros(8, np.int32), 8)      # needs 4 blocks: ok
     assert too_many.status == "queued"
+
+
+def test_metrics_survive_requests_straddling_reset():
+    """``launch.serve`` resets metrics after warmup with requests still in
+    flight; lifecycle edges for those rids must not KeyError.  Work counters
+    (completed / gen_tokens) still advance — the tokens were produced in the
+    post-reset window — but no percentile sample is recorded (its submit
+    time belongs to the discarded window) and ``untracked`` counts the
+    dropped edges."""
+    from repro.serve.metrics import ServeMetrics
+
+    t = [0.0]
+    mx = ServeMetrics(clock=lambda: t[0])
+    mx.submit("r1")
+    t[0] = 1.0
+    mx.admit("r1")
+    mx.reset()                      # r1 still in flight
+    t[0] = 2.0
+    mx.first_token("r1")            # pre-reset rid: dropped edge, no crash
+    t[0] = 3.0
+    mx.finish("r1", n_gen=5)
+    # post-reset request tracked normally alongside the straddler
+    mx.submit("r2")
+    t[0] = 4.0
+    mx.first_token("r2")
+    t[0] = 5.0
+    mx.finish("r2", n_gen=7)
+    s = mx.summary()
+    assert s["untracked"] == 2              # r1's first_token + finish
+    assert s["completed"] == 2 and s["gen_tokens"] == 12
+    assert len(mx.ttft) == 1 and len(mx.latency) == 1
+    assert s["ttft_ms"]["p50"] == 1000.0    # r2 only
+    assert s["latency_ms"]["p50"] == 2000.0

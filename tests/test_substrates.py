@@ -99,6 +99,34 @@ def test_checkpoint_roundtrip():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_checkpoint_mismatch_raises_valueerror():
+    """A truncated or foreign checkpoint must fail loudly with ValueError —
+    not a stripped-under-``-O`` assert, a bare KeyError, or (worst) a silent
+    astype/reshape coercion of corrupted leaves."""
+    from pathlib import Path
+
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": jnp.arange(4, dtype=jnp.int32)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, tree, step=3)
+        # leaf-count mismatch
+        with pytest.raises(ValueError, match="leaf count"):
+            load_checkpoint(d, {**tree, "c": jnp.zeros(2)})
+        # dtype mismatch names the leaf
+        with pytest.raises(ValueError, match="dtype mismatch at leaf 'a'"):
+            load_checkpoint(d, {**tree, "a": tree["a"].astype(jnp.bfloat16)})
+        # shape mismatch names the leaf
+        with pytest.raises(ValueError, match="shape mismatch at leaf 'b'"):
+            load_checkpoint(d, {**tree, "b": tree["b"].reshape(2, 2)})
+        # truncated shard: rewrite the (single) shard without one leaf
+        shard = next(Path(d).glob("shard_*.npz"))
+        with np.load(shard) as z:
+            kept = {k: z[k] for k in z.files if k != "b"}
+        np.savez(shard, **kept)
+        with pytest.raises(ValueError, match="absent from the shard"):
+            load_checkpoint(d, tree)
+
+
 def test_training_reduces_loss():
     """E2E sanity: 30 pjit-path steps on the synthetic corpus reduce loss."""
     cfg = get_config("qwen3-4b").reduced(n_layers=2, d_model=64, n_heads=4,
